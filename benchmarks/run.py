@@ -1,0 +1,189 @@
+"""Benchmark harness — one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (template contract), preceded by
+human-readable tables. Paper benchmarks:
+
+  table1_columns    — §III-B Table I: model-vs-paper PPA for the 64x8 /
+                      128x10 / 1024x16 columns, both cell libraries, plus
+                      measured wall-time of the fused column step.
+  table2_prototype  — §III-C Table II: the 2-layer MNIST prototype PPA + EDP
+                      + Fig. 19 complexity claims (gates/transistors).
+  macro_layouts     — §III-A Figs. 14-18: per-macro transistor counts,
+                      custom-vs-standard (mux2to1gdi 2T vs 12T etc.).
+
+System benches (this framework beyond the paper):
+
+  column_throughput — images/s through the jitted fused TNN column step.
+  lm_step_micro     — smoke-config LM train-step wall time (tokens/s).
+  roofline_summary  — aggregates experiments/dryrun JSONs (§Roofline table).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    ROWS.append(f"{name},{us:.3f},{derived}")
+
+
+def _timeit(fn: Callable, n: int = 5) -> float:
+    fn()  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+
+
+def table1_columns() -> None:
+    from repro.core import hwmodel
+
+    print("\n== Table I: column PPA (model vs paper) ==")
+    hdr = f"{'lib':9s} {'pxq':9s} {'power uW':>19s} {'time ns':>17s} {'area mm2':>17s}"
+    print(hdr)
+    for r in hwmodel.table1_report():
+        print(f"{r['library']:9s} {r['p']}x{r['q']:<6d} "
+              f"{r['power_uw_model']:8.2f}/{r['power_uw_paper']:<8.2f} "
+              f"{r['time_ns_model']:7.2f}/{r['time_ns_paper']:<7.2f} "
+              f"{r['area_mm2_model']:7.4f}/{r['area_mm2_paper']:<7.4f}")
+        _emit(f"table1_{r['library']}_{r['p']}x{r['q']}", 0.0,
+              f"power_uw={r['power_uw_model']:.2f};paper={r['power_uw_paper']:.2f}")
+
+
+def table2_prototype() -> None:
+    from repro.core import hwmodel
+
+    print("\n== Table II: 2-layer prototype PPA + EDP (model vs paper) ==")
+    for r in hwmodel.table2_report():
+        print(f"{r['library']:9s} power {r['power_mw_model']:.2f}/{r['power_mw_paper']:.2f} mW"
+              f"  time {r['time_ns_model']:.2f}/{r['time_ns_paper']:.2f} ns"
+              f"  area {r['area_mm2_model']:.2f}/{r['area_mm2_paper']:.2f} mm2"
+              f"  EDP {r['edp_model']:.2f}/{r['edp_paper']:.2f} nJ-ns")
+        _emit(f"table2_{r['library']}", 0.0,
+              f"edp={r['edp_model']:.3f};paper={r['edp_paper']:.3f}")
+    t_std = hwmodel.network_transistors(hwmodel.PROTOTYPE_LAYERS, "standard")
+    print(f"complexity: {t_std/1e6:.0f}M transistors / {t_std/4e6:.0f}M gates "
+          f"(paper: 128M / 32M)")
+    _emit("table2_complexity", 0.0, f"transistors_M={t_std/1e6:.1f};paper=128")
+    imp = hwmodel.improvement_report()
+    print("custom-vs-standard reductions:", {k: round(v, 3) for k, v in imp.items()})
+
+
+def macro_layouts() -> None:
+    from repro.core import macros
+
+    print("\n== §III-A macro layout comparison (transistor counts) ==")
+    for m in macros.MACROS:
+        ratio = m.t_std / max(m.t_custom, 1)
+        print(f"{m.name:18s} std={m.t_std:4d}T custom={m.t_custom:4d}T "
+              f"({ratio:.1f}x)  {m.description[:48]}")
+    _emit("macro_mux2to1gdi", 0.0, "std_T=12;custom_T=2")
+
+
+def column_throughput() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.stdp import default_stabilize_table
+    from repro.kernels import ops
+
+    print("\n== fused TNN column step throughput (CPU host; TPU is target) ==")
+    B = 256
+    for (p, q, theta) in ((64, 8, 24), (128, 10, 48), (1024, 16, 384)):
+        kx, kw = jax.random.split(jax.random.PRNGKey(p))
+        x = jax.random.randint(kx, (B, p), 0, 9, dtype=jnp.int8)
+        w = jax.random.randint(kw, (p, q), 0, 8, dtype=jnp.int8)
+        fwd = jax.jit(lambda x, w: ops.column_forward(x, w, theta=theta, wta=True))
+        us = _timeit(lambda: jax.block_until_ready(fwd(x, w)), n=3)
+        per_img = us / B
+        print(f"{p}x{q}: {us:9.1f} us/wave-batch ({per_img:7.3f} us/image)")
+        _emit(f"column_forward_{p}x{q}", us, f"us_per_image={per_img:.3f}")
+
+
+def tnn_wave_throughput() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import encode_images, init_network, network_train_wave, prototype_config
+
+    print("\n== full prototype learning wave (625+625 columns, batched) ==")
+    cfg = prototype_config(sites=625, theta1=20, theta2=6)
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    imgs = jnp.asarray(np.random.default_rng(0).random((32, 28, 28)), jnp.float32)
+    x = encode_images(imgs, cfg)
+    step = jax.jit(lambda xb, ps, k: network_train_wave(xb, ps, cfg, k))
+    k = jax.random.PRNGKey(1)
+    us = _timeit(lambda: jax.block_until_ready(step(x, params, k)[1][0]), n=2)
+    print(f"train wave: {us/1e3:.1f} ms/batch(32) = {us/32:.0f} us/image "
+          f"(silicon target: 19.15 ns/image @ 1.69 mW)")
+    _emit("tnn_prototype_wave", us, f"us_per_image={us/32:.1f}")
+
+
+def lm_step_micro() -> None:
+    import jax
+    from repro.configs import smoke_config
+    from repro.data.tokens import TokenStream
+    from repro.train import optimizer as OPT
+    from repro.train import train_step as TS
+
+    print("\n== smoke LM train step (CPU) ==")
+    for arch in ("llama3.2-3b", "mixtral-8x22b", "zamba2-7b"):
+        cfg = smoke_config(arch)
+        opt = OPT.OptConfig(lr=1e-3)
+        step = jax.jit(TS.make_train_step(cfg, opt, TS.TrainConfig(kv_chunk=8)))
+        state = TS.init_state(cfg, opt, jax.random.PRNGKey(0))
+        s = TokenStream(cfg.vocab_size, 4, 32)
+        batch = {k: np.asarray(v) for k, v in s.batch_at(0).items()}
+        def run():
+            nonlocal state
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss_total"])
+        us = _timeit(run, n=3)
+        toks = 4 * 32 / (us / 1e6)
+        print(f"{arch:18s} {us/1e3:8.2f} ms/step ({toks:,.0f} tok/s smoke-CPU)")
+        _emit(f"lm_step_{arch}", us, f"tokens_per_s={toks:.0f}")
+
+
+def roofline_summary() -> None:
+    d = ("experiments/dryrun_v2"
+         if glob.glob("experiments/dryrun_v2/*.json") else "experiments/dryrun")
+    files = sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        print("\n(no dry-run artifacts; run `python -m repro.launch.dryrun`)")
+        return
+    print("\n== roofline summary from dry-run artifacts ==")
+    print(f"{'arch x cell x mesh':52s} {'bottleneck':11s} {'roofline%':>9s} {'useful%':>8s}")
+    for f in files:
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        tag = f"{d['arch']} x {d['cell']} x {d['mesh']}"
+        print(f"{tag:52s} {r['bottleneck']:11s} "
+              f"{100*r['roofline_fraction']:8.2f}% {100*r['useful_flop_fraction']:7.1f}%")
+    _emit("roofline_cells", 0.0, f"n={len(files)}")
+
+
+def main() -> None:
+    table1_columns()
+    table2_prototype()
+    macro_layouts()
+    column_throughput()
+    tnn_wave_throughput()
+    lm_step_micro()
+    roofline_summary()
+    print("\nname,us_per_call,derived")
+    for row in ROWS:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

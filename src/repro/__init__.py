@@ -1,0 +1,18 @@
+"""repro — production JAX framework reproducing & extending the TNN-7nm paper.
+
+Paper: "A Custom 7nm CMOS Standard Cell Library for Implementing TNN-based
+Neuromorphic Processors" (Nair, Vellaisamy, Bhasuthkar, Shen — CMU NCAL, 2020).
+
+Public API surface:
+    repro.core      — the paper's contribution: TNN columns/layers, STDP, WTA,
+                      and the macro-level PPA hardware model.
+    repro.kernels   — Pallas TPU kernels for the TNN hot loops.
+    repro.models    — LM-family architecture substrate (10 assigned archs).
+    repro.configs   — named architecture configs (``get_config(name)``).
+    repro.sharding  — mesh partitioning rules.
+    repro.train     — optimizers, train-step builder, trainer loop.
+    repro.serve     — KV caches and serving engine.
+    repro.launch    — production mesh, dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,134 @@
+"""Sharded, elastic, async checkpointing.
+
+Layout: ``<dir>/step_<N>/`` holding ``meta.json`` (tree paths, shapes,
+dtypes, step, extra user metadata such as the data cursor and RNG key) and
+one ``.npy`` per leaf (named by a stable path hash). Writes go to a temp
+directory and are atomically renamed, so a crash mid-save never corrupts
+the latest checkpoint.
+
+Elasticity: ``restore`` takes the *target* abstract state + shardings — the
+checkpoint carries no mesh information, so the same files restore onto any
+device count / mesh shape (each leaf is device_put against the new
+sharding). This is the re-mesh path for elastic scaling and for resuming a
+512-chip run on 256 chips after losing a pod.
+
+In a true multi-host deployment each host would write only its addressable
+shards; the single-process container writes full arrays (noted in
+DESIGN.md §8). The directory protocol is host-count independent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(p), v) for p, v in flat]
+
+
+def _fname(path: str) -> str:
+    return hashlib.sha1(path.encode()).hexdigest()[:16] + ".npy"
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None,
+             block: bool = False) -> None:
+        # Materialize on host BEFORE handing to the writer thread, so the
+        # training loop can donate/overwrite device buffers immediately.
+        leaves = [(p, np.asarray(v)) for p, v in _leaf_paths(state)]
+        meta = {
+            "step": int(step),
+            "leaves": [
+                {"path": p, "file": _fname(p), "shape": list(a.shape),
+                 "dtype": str(a.dtype)}
+                for p, a in leaves
+            ],
+            "extra": extra or {},
+        }
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, leaves, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, leaves, meta)
+
+    def _write(self, step: int, leaves, meta) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for p, a in leaves:
+            np.save(os.path.join(tmp, _fname(p)), a)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, abstract_state, shardings=None):
+        """Load a checkpoint into the given target structure (+ optional
+        NamedShardings — the elastic re-mesh path)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        by_path = {l["path"]: l for l in meta["leaves"]}
+        tgt = _leaf_paths(abstract_state)
+        sh = (_leaf_paths(shardings) if shardings is not None
+              else [(p, None) for p, _ in tgt])
+        vals = []
+        for (p, sds), (_, s) in zip(tgt, sh):
+            if p not in by_path:
+                raise KeyError(f"checkpoint missing leaf {p}")
+            arr = np.load(os.path.join(d, by_path[p]["file"]))
+            want = tuple(sds.shape) if hasattr(sds, "shape") else arr.shape
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{p}: checkpoint shape {arr.shape} != {want}")
+            vals.append(jax.device_put(arr, s) if s is not None else jax.device_put(arr))
+        treedef = jax.tree_util.tree_structure(abstract_state)
+        return jax.tree_util.tree_unflatten(treedef, vals), meta["extra"]

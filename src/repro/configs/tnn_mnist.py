@@ -1,0 +1,18 @@
+"""tnn-mnist — the PAPER'S OWN architecture (Fig. 19): the 2-layer TNN
+prototype, 625 columns of 32x12 -> 625 columns of 12x10 (13,750 neurons,
+315,000 synapses). This is the config the custom 7nm macros implement."""
+from repro.core.network import prototype_config
+from repro.core.stdp import STDPConfig
+from repro.core.temporal import WaveSpec
+
+WAVE = WaveSpec(time_bits=3, weight_bits=3)
+STDP = STDPConfig()
+
+
+def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8):
+    return prototype_config(
+        wave=WAVE, stdp=STDP, sites=sites, theta1=theta1, theta2=theta2
+    )
+
+
+CONFIG = network_config()

@@ -1,0 +1,40 @@
+# The paper's primary contribution: the TNN computational model (temporal
+# coding, RNL synapses, pac-adder neurons, WTA, stabilized STDP) and the
+# macro-level PPA hardware model that reproduces the paper's Tables I/II.
+from repro.core.temporal import WaveSpec, encode_intensity, decode_time
+from repro.core.stdp import STDPConfig, stdp_update, default_stabilize_table
+from repro.core.column import (
+    ColumnConfig,
+    body_potential,
+    column_forward,
+    column_forward_matmul,
+    column_step,
+    crossing_time,
+    init_weights,
+    wta_inhibit,
+)
+from repro.core.layer import LayerConfig, init_layer, layer_forward, layer_step
+from repro.core.network import (
+    NetworkConfig,
+    prototype_config,
+    init_network,
+    encode_images,
+    network_forward,
+    network_train_wave,
+    build_vote_table,
+    classify,
+    build_centroids,
+    classify_centroid,
+)
+from repro.core import hwmodel, macros
+
+__all__ = [
+    "WaveSpec", "encode_intensity", "decode_time",
+    "STDPConfig", "stdp_update", "default_stabilize_table",
+    "ColumnConfig", "body_potential", "column_forward", "column_forward_matmul",
+    "column_step", "crossing_time", "init_weights", "wta_inhibit",
+    "LayerConfig", "init_layer", "layer_forward", "layer_step",
+    "NetworkConfig", "prototype_config", "init_network", "encode_images",
+    "network_forward", "network_train_wave", "build_vote_table", "classify", "build_centroids", "classify_centroid",
+    "hwmodel", "macros",
+]

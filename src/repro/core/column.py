@@ -1,0 +1,146 @@
+"""The TNN column — q excitatory SRM0 neurons x p RNL synapses + WTA + STDP.
+
+This is the paper's central building block (Fig. 1): everything in silicon
+(`syn_output` ramps, the `pac_adder` parallel accumulative counter, the
+`less_equal` WTA chain) composes into the pure function
+
+    (input spike times x, weights w)  ->  (output spike times z, new w)
+
+evaluated once per gamma wave.
+
+Two algebraically identical forward formulations are provided:
+
+* :func:`column_forward` — direct broadcast evaluation of the body potential
+  ``V[t, j] = sum_i min(relu(t - x_i), w_ij)`` at all T wave positions
+  (reference semantics; used by tests and as the Pallas oracle).
+* :func:`column_forward_matmul` — the MXU-native factorization
+  ``V = M^T N`` with ``M[(i,k), t] = [x_i + k <= t]`` and
+  ``N[(i,k), j] = [k <= w_ij]`` (see DESIGN.md §2): the RNL accumulation
+  becomes a dense (T x pT)@(pT x q) 0/1 matmul — this is what the Pallas
+  kernel tiles.
+
+Threshold semantics: neuron j spikes at the first wave position t with
+``V[t, j] >= theta``; if the potential never crosses within the wave the
+neuron stays silent (z = T).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stdp import STDPConfig, stdp_update
+from repro.core.temporal import WaveSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnConfig:
+    """Static shape/hyper description of a p x q column."""
+
+    p: int  # synapses per neuron (column fan-in)
+    q: int  # neurons per column
+    theta: int  # body-potential threshold
+    wave: WaveSpec = WaveSpec()
+    stdp: STDPConfig = STDPConfig()
+    # forward implementation: "direct" broadcast evaluation, or "matmul" —
+    # the MXU-native (i,k)-factorized form (§Perf TNN iteration; both are
+    # exactly equal, see tests)
+    impl: str = "direct"
+
+    def validate(self) -> None:
+        self.wave.validate()
+        if self.p < 1 or self.q < 1:
+            raise ValueError(f"bad column shape p={self.p} q={self.q}")
+        if not (1 <= self.theta <= self.p * self.wave.w_max):
+            raise ValueError(f"theta {self.theta} unreachable for p={self.p}")
+
+
+def init_weights(rng: jax.Array, p: int, q: int, spec: WaveSpec) -> jax.Array:
+    """Uniform-random initial weights in [0, w_max] (hardware powers up from
+    SRAM-loaded seeds; uniform is the convention of ref [2])."""
+    return jax.random.randint(rng, (p, q), 0, spec.w_max + 1, dtype=jnp.int8)
+
+
+def body_potential(x: jax.Array, w: jax.Array, spec: WaveSpec) -> jax.Array:
+    """V[..., t, j] at every wave position t in [0, T). x: (..., p), w: (p, q)."""
+    T = spec.T
+    t = jnp.arange(T, dtype=jnp.int32)
+    ramp = jnp.maximum(t[None, :] - x[..., :, None].astype(jnp.int32), 0)  # (..., p, T)
+    resp = jnp.minimum(ramp[..., :, :, None], w.astype(jnp.int32)[..., :, None, :])
+    return resp.sum(axis=-3)  # (..., T, q)
+
+
+def crossing_time(V: jax.Array, theta, spec: WaveSpec) -> jax.Array:
+    """First wave position where V >= theta, else T. V: (..., T, q)."""
+    crossed = V >= jnp.asarray(theta, dtype=V.dtype)
+    any_cross = crossed.any(axis=-2)
+    first = jnp.argmax(crossed, axis=-2).astype(jnp.int32)
+    return jnp.where(any_cross, first, spec.T).astype(jnp.int8)
+
+
+def column_forward(x: jax.Array, w: jax.Array, theta, spec: WaveSpec) -> jax.Array:
+    """Pre-inhibition output spike times z_pre: (..., q)."""
+    return crossing_time(body_potential(x, w, spec), theta, spec)
+
+
+def _ramp_factors(x: jax.Array, w: jax.Array, spec: WaveSpec):
+    """The (M, N) 0/1 factors of the matmul formulation (bf16 for the MXU)."""
+    T = spec.T
+    t = jnp.arange(T, dtype=jnp.int32)
+    k = jnp.arange(1, T + 1, dtype=jnp.int32)  # ramp step index
+    # M[..., i, k, t] = [x_i + k <= t]
+    m = (x[..., :, None].astype(jnp.int32) + k[None, :])[..., None] <= t
+    # N[i, k, j] = [k <= w_ij]
+    n = k[None, :, None] <= w.astype(jnp.int32)[:, None, :]
+    return m, n
+
+
+def column_forward_matmul(x: jax.Array, w: jax.Array, theta, spec: WaveSpec) -> jax.Array:
+    """MXU-native forward: V = einsum('...ikt,ikj->...tj', M, N)."""
+    m, n = _ramp_factors(x, w, spec)
+    V = jnp.einsum(
+        "...ikt,ikj->...tj",
+        m.astype(jnp.bfloat16),
+        n.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return crossing_time(V.astype(jnp.int32), theta, spec)
+
+
+def wta_inhibit(z: jax.Array, spec: WaveSpec) -> jax.Array:
+    """1-WTA lateral inhibition (`less_equal` macro semantics).
+
+    The earliest spike passes; ties break to the LOWEST neuron index
+    (``argmin`` returns the first minimal index, exactly the paper's
+    systematic tie-break). Non-winners are nullified to T. z: (..., q).
+    """
+    zi = z.astype(jnp.int32)
+    winner = jnp.argmin(zi, axis=-1)
+    q = z.shape[-1]
+    idx = jnp.arange(q, dtype=jnp.int32)
+    won = idx == winner[..., None]
+    fired = zi < spec.T
+    return jnp.where(won & fired, zi, spec.T).astype(jnp.int8)
+
+
+def column_step(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: ColumnConfig,
+    rng: Optional[jax.Array] = None,
+    learn: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One full gamma wave: forward -> WTA -> (optionally) STDP.
+
+    x: (B?, p) int8 spike times; w: (p, q) int8.
+    Returns (z_out (B?, q) int8 post-WTA spike times, new weights).
+    """
+    z_pre = column_forward(x, w, cfg.theta, cfg.wave)
+    z_out = wta_inhibit(z_pre, cfg.wave)
+    if learn:
+        if rng is None:
+            raise ValueError("learning step requires an rng key")
+        w = stdp_update(w, x, z_out, rng, cfg.wave, cfg.stdp)
+    return z_out, w

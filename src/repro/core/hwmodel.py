@@ -1,0 +1,226 @@
+"""PPA hardware model — reproduces the paper's Tables I & II as code.
+
+The paper's benchmarking instrument is: compose macro instances into columns
+and the 2-layer prototype, then report post-layout Power / Computation-time /
+Area per library (standard vs custom). We reproduce it as a calibrated
+analytical model:
+
+* **Power & area** use the structural basis ``[p*q, q, p, 1]`` per column —
+  exactly the multiplicity structure of the macro netlist (synapse-array
+  terms ∝ pq, per-neuron WTA/body terms ∝ q, per-input spike_gen terms ∝ p,
+  per-column clocking ∝ 1; the pac_adder's q(p−1) term folds into pq and q).
+  The 4 coefficients per (metric, library) are solved EXACTLY from the 4
+  published measurements: the three Table-I columns and the Table-II
+  prototype (= 625 x col(32,12) + 625 x col(12,10)). The model therefore
+  interpolates the paper perfectly and extrapolates structurally.
+
+* **Computation time** is physical: one gamma wave through a column is
+  dominated by the pac_adder accumulate path, so ``t = D0 + D1*log2(p)``
+  (least-squares over Table I; residuals < 2%). Multi-layer networks are
+  wave-pipelined — throughput period = max over layers, latency = sum —
+  matching Table II (std 24.08 ns model vs 24.14 paper; custom 18.36 vs
+  19.15, −4%: documented residual).
+
+* **Energy-delay product** EDP = power * time^2 (nJ·ns, as in Table II).
+
+Everything the paper claims is kept alongside the model in PAPER_* constants
+so ``benchmarks/run.py`` prints model-vs-paper side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core import macros
+
+# --------------------------------------------------------------------------
+# Published data (the calibration + validation targets)
+# --------------------------------------------------------------------------
+
+# Table I: (p, q) -> (power_uW, time_ns, area_mm2)
+PAPER_TABLE1: Dict[str, Dict[Tuple[int, int], Tuple[float, float, float]]] = {
+    "standard": {
+        (64, 8): (3.89, 26.92, 0.004),
+        (128, 10): (10.27, 28.52, 0.009),
+        (1024, 16): (131.46, 36.52, 0.124),
+    },
+    "custom": {
+        (64, 8): (2.73, 20.59, 0.003),
+        (128, 10): (5.76, 22.79, 0.006),
+        (1024, 16): (73.73, 29.49, 0.079),
+    },
+}
+
+# Table II: prototype -> (power_mW, time_ns, area_mm2, edp_nJ_ns)
+PAPER_TABLE2: Dict[str, Tuple[float, float, float, float]] = {
+    "standard": (2.54, 24.14, 2.36, 1.48),
+    "custom": (1.69, 19.15, 1.56, 0.62),
+}
+
+# Fig. 19: prototype structure and aggregate complexity claims.
+PROTOTYPE_LAYERS: Tuple[Tuple[int, int, int], ...] = ((625, 32, 12), (625, 12, 10))
+PAPER_PROTOTYPE_GATES = 32e6
+PAPER_PROTOTYPE_TRANSISTORS = 128e6
+PAPER_45NM_1024x16 = {"power_mW": 7.96, "time_ns": 42.3, "area_mm2": 1.65}
+PAPER_45NM_PROTO = {"power_mW": 162.4, "area_mm2": 33.04, "time_ns": 45.8}
+
+LIBRARIES = ("standard", "custom")
+
+
+def _basis(p: int, q: int) -> np.ndarray:
+    return np.array([p * q, q, p, 1.0], dtype=np.float64)
+
+
+def _prototype_basis(layers: Iterable[Tuple[int, int, int]]) -> np.ndarray:
+    b = np.zeros(4)
+    for n_cols, p, q in layers:
+        b += n_cols * _basis(p, q)
+    return b
+
+
+def _calibrate() -> Dict[str, Dict[str, np.ndarray]]:
+    """Solve the exact 4x4 system per library for power and area; LSQ delay."""
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for lib in LIBRARIES:
+        rows = [_basis(p, q) for (p, q) in PAPER_TABLE1[lib]]
+        rows.append(_prototype_basis(PROTOTYPE_LAYERS))
+        A = np.stack(rows)  # (4, 4)
+
+        pw = np.array([v[0] for v in PAPER_TABLE1[lib].values()] +
+                      [PAPER_TABLE2[lib][0] * 1e3])  # µW
+        ar = np.array([v[2] * 1e6 for v in PAPER_TABLE1[lib].values()] +
+                      [PAPER_TABLE2[lib][2] * 1e6])  # µm²
+        power_c = np.linalg.solve(A, pw)
+        area_c = np.linalg.solve(A, ar)
+
+        # delay: t = D0 + D1 * log2(p), least squares over Table I
+        X = np.stack([np.ones(3), [math.log2(p) for (p, _) in PAPER_TABLE1[lib]]], axis=1)
+        t = np.array([v[1] for v in PAPER_TABLE1[lib].values()])
+        delay_c, *_ = np.linalg.lstsq(X, t, rcond=None)
+        out[lib] = {"power": power_c, "area": area_c, "delay": delay_c}
+    return out
+
+
+_COEFFS = _calibrate()
+
+
+@dataclasses.dataclass(frozen=True)
+class PPA:
+    """Power (µW), computation time (ns), area (µm²) — plus derived views."""
+
+    power_uw: float
+    time_ns: float
+    area_um2: float
+
+    @property
+    def power_mw(self) -> float:
+        return self.power_uw / 1e3
+
+    @property
+    def area_mm2(self) -> float:
+        return self.area_um2 / 1e6
+
+    @property
+    def edp_nj_ns(self) -> float:
+        # energy per wave (nJ) * time (ns): P[µW]*t[ns] = 1e-6 µJ = fJ... use
+        # the paper's convention: EDP = (P * t) * t with P in mW, t in ns.
+        return (self.power_uw * 1e-3 * self.time_ns) * self.time_ns * 1e-3
+
+    def scaled(self, n: float) -> "PPA":
+        return PPA(self.power_uw * n, self.time_ns, self.area_um2 * n)
+
+
+def column_ppa(p: int, q: int, library: str = "custom") -> PPA:
+    """Model PPA of a single p x q column."""
+    if library not in LIBRARIES:
+        raise ValueError(f"unknown library {library!r}")
+    c = _COEFFS[library]
+    b = _basis(p, q)
+    power = float(max(b @ c["power"], 0.0))
+    area = float(max(b @ c["area"], 0.0))
+    delay = float(c["delay"][0] + c["delay"][1] * math.log2(max(p, 2)))
+    return PPA(power, delay, area)
+
+
+def network_ppa(
+    layers: Iterable[Tuple[int, int, int]], library: str = "custom"
+) -> PPA:
+    """PPA of a wave-pipelined multi-layer TNN: (n_cols, p, q) per layer.
+
+    Power/area sum across all columns; computation time (pipeline period) is
+    the max per-column delay across layers — the paper's Table-II convention
+    ("can process each image in 19 ns").
+    """
+    power = area = 0.0
+    period = 0.0
+    for n_cols, p, q in layers:
+        col = column_ppa(p, q, library)
+        power += n_cols * col.power_uw
+        area += n_cols * col.area_um2
+        period = max(period, col.time_ns)
+    return PPA(power, period, area)
+
+
+def prototype_ppa(library: str = "custom") -> PPA:
+    return network_ppa(PROTOTYPE_LAYERS, library)
+
+
+def network_transistors(layers: Iterable[Tuple[int, int, int]], library: str) -> int:
+    return sum(n * macros.column_transistors(p, q, library) for n, p, q in layers)
+
+
+def network_gates(layers: Iterable[Tuple[int, int, int]], library: str) -> float:
+    return network_transistors(layers, library) / 4.0
+
+
+def table1_report() -> List[Dict[str, float]]:
+    """Model vs paper for every Table-I entry (benchmark: one per paper table)."""
+    rows = []
+    for lib in LIBRARIES:
+        for (p, q), (pw, t, ar) in PAPER_TABLE1[lib].items():
+            m = column_ppa(p, q, lib)
+            rows.append(
+                dict(library=lib, p=p, q=q,
+                     power_uw_model=m.power_uw, power_uw_paper=pw,
+                     time_ns_model=m.time_ns, time_ns_paper=t,
+                     area_mm2_model=m.area_mm2, area_mm2_paper=ar)
+            )
+    return rows
+
+
+def table2_report() -> List[Dict[str, float]]:
+    rows = []
+    for lib in LIBRARIES:
+        m = prototype_ppa(lib)
+        pw, t, ar, edp = PAPER_TABLE2[lib]
+        rows.append(
+            dict(library=lib,
+                 power_mw_model=m.power_mw, power_mw_paper=pw,
+                 time_ns_model=m.time_ns, time_ns_paper=t,
+                 area_mm2_model=m.area_mm2, area_mm2_paper=ar,
+                 edp_model=m.power_mw * m.time_ns * m.time_ns * 1e-3,
+                 edp_paper=edp)
+        )
+    return rows
+
+
+def improvement_report() -> Dict[str, float]:
+    """The paper's headline custom-vs-standard ratios (~45% power, ~35% area,
+    ~20% faster for columns; ~55% EDP for the prototype)."""
+    t1 = PAPER_TABLE1
+    ratios = {}
+    for metric, idx in (("power", 0), ("time", 1), ("area", 2)):
+        r = [
+            1.0 - t1["custom"][k][idx] / t1["standard"][k][idx]
+            for k in t1["standard"]
+        ]
+        ratios[f"{metric}_reduction_mean"] = sum(r) / len(r)
+    s = prototype_ppa("standard")
+    c = prototype_ppa("custom")
+    es = s.power_mw * s.time_ns**2 * 1e-3
+    ec = c.power_mw * c.time_ns**2 * 1e-3
+    ratios["prototype_edp_reduction_model"] = 1.0 - ec / es
+    return ratios

@@ -1,0 +1,115 @@
+"""Multi-column TNN layers (Fig. 1: a layer is a grid of identical columns).
+
+A layer holds ``n_cols`` columns of identical (p, q) shape; weights are a
+single ``(n_cols, p, q)`` int8 array and every column runs the same pure
+``column_step`` — the silicon's spatial replication becomes ``vmap``.
+
+Also provides the receptive-field plumbing for the MNIST prototype: 4x4
+pixel patches x {on, off} polarity = 32 synapses per column, 25x25 = 625
+sites over a 28x28 field (Fig. 19).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.column import (
+    ColumnConfig, column_forward, column_forward_matmul, init_weights, wta_inhibit,
+)
+from repro.core.stdp import stdp_update
+from repro.core.temporal import WaveSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerConfig:
+    n_cols: int
+    column: ColumnConfig
+
+    def validate(self) -> None:
+        if self.n_cols < 1:
+            raise ValueError(f"n_cols={self.n_cols}")
+        self.column.validate()
+
+    @property
+    def n_neurons(self) -> int:
+        return self.n_cols * self.column.q
+
+    @property
+    def n_synapses(self) -> int:
+        return self.n_cols * self.column.p * self.column.q
+
+
+def init_layer(rng: jax.Array, cfg: LayerConfig) -> jax.Array:
+    keys = jax.random.split(rng, cfg.n_cols)
+    return jax.vmap(lambda k: init_weights(k, cfg.column.p, cfg.column.q, cfg.column.wave))(keys)
+
+
+def layer_forward(x: jax.Array, w: jax.Array, cfg: LayerConfig) -> jax.Array:
+    """x: (B, n_cols, p) -> post-WTA spike times (B, n_cols, q)."""
+    spec = cfg.column.wave
+    fwd = (column_forward_matmul if getattr(cfg.column, "impl", "direct") == "matmul"
+           else column_forward)
+
+    def one_col(xc, wc):
+        return wta_inhibit(fwd(xc, wc, cfg.column.theta, spec), spec)
+
+    # vmap over columns (axis 1 of x, axis 0 of w)
+    return jax.vmap(one_col, in_axes=(1, 0), out_axes=1)(x, w)
+
+
+def layer_step(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: LayerConfig,
+    rng: Optional[jax.Array] = None,
+    learn: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One gamma wave for the whole layer. x: (B, n_cols, p)."""
+    z = layer_forward(x, w, cfg)
+    if learn:
+        if rng is None:
+            raise ValueError("learning requires rng")
+        keys = jax.random.split(rng, cfg.n_cols)
+        spec, stdp = cfg.column.wave, cfg.column.stdp
+        w = jax.vmap(
+            lambda wc, xc, zc, k: stdp_update(wc, xc, zc, k, spec, stdp),
+            in_axes=(0, 1, 1, 0),
+        )(w, x, z, keys)
+    return z, w
+
+
+# ---------------------------------------------------------------------------
+# Receptive-field extraction (the prototype's patch front end)
+# ---------------------------------------------------------------------------
+
+
+def extract_patches(images: jax.Array, k: int, stride: int = 1) -> jax.Array:
+    """(B, H, W) -> (B, sites, k*k) sliding patches (valid padding).
+
+    28x28 with k=4, stride=1 -> 625 sites of 16 pixels, matching Fig. 19's
+    625 columns x (16 px x 2 polarities = 32 synapses).
+    """
+    B, H, W = images.shape
+    oh, ow = (H - k) // stride + 1, (W - k) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        images[:, None, :, :].astype(jnp.float32),
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (B, k*k, oh, ow)
+    return patches.reshape(B, k * k, oh * ow).transpose(0, 2, 1)
+
+
+def encode_patches_onoff(patches01: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Pixel intensities in [0,1] -> interleaved on/off spike times.
+
+    (B, sites, px) -> (B, sites, 2*px) int8; this is the DoG-style
+    two-polarity front end feeding layer 1 (DESIGN.md §1).
+    """
+    on = jnp.round((1.0 - jnp.clip(patches01, 0, 1)) * spec.T)
+    off = jnp.round(jnp.clip(patches01, 0, 1) * spec.T)
+    out = jnp.stack([on, off], axis=-1).reshape(*patches01.shape[:-1], patches01.shape[-1] * 2)
+    return out.astype(jnp.int8)

@@ -1,0 +1,194 @@
+"""Multi-layer TNNs — in particular the paper's 2-layer MNIST prototype.
+
+Fig. 19: layer 1 = 625 columns of 32x12 (4x4-pixel on/off receptive fields,
+25x25 sites), layer 2 = 625 columns of 12x10 (same-site, fed by layer 1's
+12 neurons). 13,750 neurons / 315,000 synapses total. Unsupervised STDP
+throughout; classification = per-site winner labelling + majority vote.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.column import ColumnConfig
+from repro.core.layer import (
+    LayerConfig,
+    encode_patches_onoff,
+    extract_patches,
+    init_layer,
+    layer_forward,
+    layer_step,
+)
+from repro.core.stdp import STDPConfig
+from repro.core.temporal import WaveSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    layers: Tuple[LayerConfig, ...]
+    image_hw: Tuple[int, int] = (28, 28)
+    patch_k: int = 4
+    n_classes: int = 10
+
+    def validate(self) -> None:
+        for l in self.layers:
+            l.validate()
+
+    @property
+    def n_neurons(self) -> int:
+        return sum(l.n_neurons for l in self.layers)
+
+    @property
+    def n_synapses(self) -> int:
+        return sum(l.n_synapses for l in self.layers)
+
+
+def prototype_config(
+    wave: WaveSpec = WaveSpec(),
+    stdp: STDPConfig = STDPConfig(),
+    sites: int = 625,
+    theta1: int = 24,
+    theta2: int = 8,
+) -> NetworkConfig:
+    """The paper's 2-layer prototype (set ``sites`` small for smoke tests)."""
+    l1 = LayerConfig(sites, ColumnConfig(p=32, q=12, theta=theta1, wave=wave, stdp=stdp))
+    l2 = LayerConfig(sites, ColumnConfig(p=12, q=10, theta=theta2, wave=wave, stdp=stdp))
+    return NetworkConfig(layers=(l1, l2))
+
+
+def init_network(rng: jax.Array, cfg: NetworkConfig) -> List[jax.Array]:
+    keys = jax.random.split(rng, len(cfg.layers))
+    return [init_layer(k, l) for k, l in zip(keys, cfg.layers)]
+
+
+def dog_filter(images01: jax.Array) -> jax.Array:
+    """Center-surround (DoG-style) contrast: pixel minus 3x3 neighborhood
+    mean. Flat regions -> ~0 -> NO spikes in either polarity channel — the
+    sparse retina-like code the paper's front end assumes."""
+    x = images01
+    pad = jnp.pad(x, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    surround = jnp.zeros_like(x)
+    for dr in (-1, 0, 1):
+        for dc in (-1, 0, 1):
+            surround = surround + pad[:, 1 + dr : 1 + dr + x.shape[1],
+                                      1 + dc : 1 + dc + x.shape[2]]
+    surround = surround / 9.0
+    return x - surround
+
+
+def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
+    """(B, H, W) float in [0,1] -> (B, sites, 32) int8 spike times.
+
+    DoG contrast -> on/off half-wave rectification -> temporal encoding.
+    Strong contrast spikes early; zero contrast never spikes."""
+    c = dog_filter(images01) * 3.0  # contrast gain
+    on = extract_patches(jnp.clip(c, 0.0, 1.0), cfg.patch_k)
+    off = extract_patches(jnp.clip(-c, 0.0, 1.0), cfg.patch_k)
+    wave = cfg.layers[0].column.wave
+    t_on = jnp.round((1.0 - on) * wave.T)
+    t_off = jnp.round((1.0 - off) * wave.T)
+    out = jnp.stack([t_on, t_off], axis=-1).reshape(
+        on.shape[0], on.shape[1], on.shape[2] * 2)
+    return out.astype(jnp.int8)
+
+
+def network_forward(
+    x: jax.Array, params: Sequence[jax.Array], cfg: NetworkConfig
+) -> List[jax.Array]:
+    """Run all layers; returns per-layer post-WTA spike times."""
+    outs = []
+    for w, lcfg in zip(params, cfg.layers):
+        x = layer_forward(x, w, lcfg)
+        outs.append(x)
+    return outs
+
+
+def network_train_wave(
+    x: jax.Array,
+    params: Sequence[jax.Array],
+    cfg: NetworkConfig,
+    rng: jax.Array,
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """One unsupervised gamma wave through the whole network (all layers learn)."""
+    new_params, outs = [], []
+    keys = jax.random.split(rng, len(cfg.layers))
+    for w, lcfg, k in zip(params, cfg.layers, keys):
+        x, w = layer_step(x, w, lcfg, k, learn=True)
+        new_params.append(w)
+        outs.append(x)
+    return outs, new_params
+
+
+# ---------------------------------------------------------------------------
+# Unsupervised readout: label neurons by the classes they win on, then vote.
+# ---------------------------------------------------------------------------
+
+
+def winner_map(z_last: jax.Array, T: int) -> Tuple[jax.Array, jax.Array]:
+    """Per (batch, site): winning neuron index and fired mask. z: (B, S, q)."""
+    winner = jnp.argmin(z_last.astype(jnp.int32), axis=-1)
+    fired = (z_last.astype(jnp.int32) < T).any(axis=-1)
+    return winner, fired
+
+
+def build_vote_table(
+    z_last: jax.Array, labels: jax.Array, n_classes: int, T: int
+) -> jax.Array:
+    """Histogram (sites, q, n_classes): how often neuron (s, j) wins on class c."""
+    B, S, q = z_last.shape
+    winner, fired = winner_map(z_last, T)  # (B, S)
+    onehot_w = jax.nn.one_hot(winner, q, dtype=jnp.float32) * fired[..., None]
+    onehot_c = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # (B, C)
+    return jnp.einsum("bsq,bc->sqc", onehot_w, onehot_c)
+
+
+def classify(z_last: jax.Array, vote_table: jax.Array, T: int,
+             soft: bool = True) -> jax.Array:
+    """Vote of per-site winner labels. Returns (B,) class ids.
+
+    ``soft=True`` weights each firing site's vote by its empirical class
+    posterior P(c | site, winner) — in hardware a small per-neuron LUT
+    feeding the vote counters; ``soft=False`` is the plain majority vote of
+    argmax site labels."""
+    winner, fired = winner_map(z_last, T)  # (B, S)
+    n_classes = vote_table.shape[-1]
+    S = vote_table.shape[0]
+    if soft:
+        post = vote_table / jnp.maximum(
+            vote_table.sum(axis=-1, keepdims=True), 1.0)  # (S, q, C)
+        votes = post[jnp.arange(S)[None, :], winner]  # (B, S, C)
+        votes = votes * fired[..., None]
+        return jnp.argmax(votes.sum(axis=1), axis=-1)
+    site_label = jnp.argmax(vote_table, axis=-1)  # (S, q)
+    lab = site_label[jnp.arange(S)[None, :], winner]  # (B, S)
+    votes = jax.nn.one_hot(lab, n_classes, dtype=jnp.float32) * fired[..., None]
+    return jnp.argmax(votes.sum(axis=1), axis=-1)
+
+
+def winner_bits(z_last: jax.Array, T: int) -> jax.Array:
+    """(B, S, q) post-WTA spike times -> flat binary winner map (B, S*q).
+    The sparse code the prototype's readout hardware sees (one bit per
+    neuron per gamma wave)."""
+    return (z_last.astype(jnp.int32) < T).reshape(z_last.shape[0], -1)
+
+
+def build_centroids(z_last: jax.Array, labels: jax.Array, n_classes: int,
+                    T: int) -> jax.Array:
+    """Per-class mean winner-bit vectors (C, S*q) — in hardware: per-class
+    counters accumulated during the labelling pass."""
+    bits = winner_bits(z_last, T).astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # (B, C)
+    sums = jnp.einsum("bf,bc->cf", bits, onehot)
+    counts = jnp.maximum(onehot.sum(axis=0), 1.0)
+    return sums / counts[:, None]
+
+
+def classify_centroid(z_last: jax.Array, centroids: jax.Array, T: int) -> jax.Array:
+    """Nearest-centroid on winner bits (min distance = max correlation —
+    a Hamming-style comparator over the wave's spike pattern)."""
+    bits = winner_bits(z_last, T).astype(jnp.float32)
+    d = (jnp.square(bits[:, None, :] - centroids[None]).sum(-1))
+    return jnp.argmin(d, axis=-1)

@@ -1,0 +1,101 @@
+"""Temporal (spike-time) coding — the representational substrate of TNNs.
+
+A value is encoded as the *time* of a single spike within a gamma cycle of
+``T = 2**time_bits`` unit-clock ticks (paper: ``time_bits=3`` → T=8, matching
+the 8-cycle-wide pulses produced by the ``spike_gen`` macro). Times are
+integers in ``[0, T]``:
+
+    * ``t in [0, T)``  — a spike at tick ``t`` (smaller = earlier = stronger)
+    * ``t == T``       — *no spike* (infinity). The hardware represents this
+                         as a line that never asserts within the wave.
+
+One gamma wave == one jitted step: the ``pulse2edge`` / ``edge2pulse`` /
+``spike_gen`` clocking macros of the paper are absorbed into the program
+boundary (see DESIGN.md §2), so every function here is pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TIME_BITS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSpec:
+    """Static description of the gamma-wave timing discipline.
+
+    Attributes:
+        time_bits: bits of temporal resolution; the wave spans ``2**time_bits``
+            unit clocks (aclk ticks) between gamma clock (gclk) edges.
+        weight_bits: synaptic weight resolution (paper: 3 → w in [0, 7]).
+    """
+
+    time_bits: int = DEFAULT_TIME_BITS
+    weight_bits: int = 3
+
+    @property
+    def T(self) -> int:
+        """Wave length in unit clocks; also the 'no spike' code."""
+        return 1 << self.time_bits
+
+    @property
+    def w_max(self) -> int:
+        return (1 << self.weight_bits) - 1
+
+    def validate(self) -> None:
+        if not (1 <= self.time_bits <= 7):
+            raise ValueError(f"time_bits out of range: {self.time_bits}")
+        if not (1 <= self.weight_bits <= 7):
+            raise ValueError(f"weight_bits out of range: {self.weight_bits}")
+
+
+def encode_intensity(values: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Encode real intensities in [0, 1] as spike times (strong → early).
+
+    ``v == 1`` fires at t=0; ``v == 0`` does not fire (t = T). Linear
+    quantization over the wave, exactly what an off-chip sensory encoder
+    feeding ``spike_gen`` produces.
+    """
+    v = jnp.clip(values, 0.0, 1.0)
+    t = jnp.round((1.0 - v) * spec.T)
+    return t.astype(jnp.int8)
+
+
+def decode_time(times: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Inverse of :func:`encode_intensity` (no-spike → 0.0)."""
+    return (1.0 - times.astype(jnp.float32) / spec.T).clip(0.0, 1.0)
+
+
+def is_spike(times: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Boolean mask of lines that actually spike within the wave."""
+    return times < spec.T
+
+
+def onoff_encode(values: jax.Array, spec: WaveSpec) -> jax.Array:
+    """On-center/off-center two-channel encoding (doubles the last axis).
+
+    The MNIST prototype of the paper feeds each receptive field through both
+    polarities (32 synapses = 4x4 pixels x {on, off}); this mirrors that DoG
+    front end in its simplest (center-only) form.
+    """
+    on = encode_intensity(values, spec)
+    off = encode_intensity(1.0 - values, spec)
+    return jnp.concatenate([on[..., None], off[..., None]], axis=-1).reshape(
+        *values.shape[:-1], values.shape[-1] * 2
+    )
+
+
+def ramp_response(times: jax.Array, weights: jax.Array, t: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Ramp-no-leak (RNL) response of one synapse at wave position ``t``.
+
+    ``min(max(t - x, 0), w)`` — the thermometer-coded output of the paper's
+    ``syn_output`` macro: starts ramping one tick after the input spike,
+    slope 1/tick, saturates at the weight, never decays within the wave.
+    """
+    del spec  # shape-only; kept for signature symmetry
+    x = times.astype(jnp.int32)
+    w = weights.astype(jnp.int32)
+    return jnp.minimum(jnp.maximum(t - x, 0), w)

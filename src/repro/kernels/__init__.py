@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot spots (the column datapath
+# the custom macros implement in silicon): fused RNL-accumulate+threshold
+# forward, WTA inhibition, and the fused STDP update. ops.py wraps them with
+# padding + CPU interpret fallback; ref.py holds the pure-jnp oracles.
+from repro.kernels import ops, ref
+from repro.kernels.ops import column_forward, layer_forward_fused, stdp_update, wta
+
+__all__ = ["ops", "ref", "column_forward", "layer_forward_fused", "stdp_update", "wta"]

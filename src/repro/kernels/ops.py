@@ -1,0 +1,120 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: CPU fallback (interpret=True — the kernels execute their bodies in
+Python/XLA on CPU for validation; on TPU they compile via Mosaic), padding
+to tile multiples (padded synapses are encoded as no-spike/zero-weight so
+they contribute nothing), and layer-level vmapping over columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stdp_update import stdp_update_pallas
+from repro.kernels.tnn_column import column_forward_pallas
+from repro.kernels.wta import wta_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def column_forward(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    theta: int,
+    T: int = 8,
+    wta: bool = False,
+    block_b: int = 64,
+    block_p: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused column forward (+ optional WTA). x: (B, p), w: (p, q) -> (B, q) i32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, p = x.shape
+    q = w.shape[1]
+    block_b = min(block_b, _pad_to(B, 8))
+    block_p = min(block_p, _pad_to(p, 8))
+    Bp, pp, qp = _pad_to(B, block_b), _pad_to(p, block_p), q
+    if (Bp, pp) != (B, p):
+        x = jnp.pad(x, ((0, Bp - B), (0, pp - p)), constant_values=T)  # no-spike
+        w = jnp.pad(w, ((0, pp - p), (0, 0)))  # zero weight -> zero response
+    z = column_forward_pallas(
+        x, w, theta=theta, T=T, wta=wta,
+        block_b=block_b, block_p=block_p, interpret=interpret,
+    )
+    return z[:B, :qp]
+
+
+def wta(z: jax.Array, *, T: int = 8, block_b: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Post-forward WTA inhibition. z: (B, q) -> (B, q) i32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, q = z.shape
+    block_b = min(block_b, _pad_to(B, 8))
+    Bp = _pad_to(B, block_b)
+    if Bp != B:
+        z = jnp.pad(z, ((0, Bp - B), (0, 0)), constant_values=T)
+    return wta_pallas(z, T=T, block_b=block_b, interpret=interpret)[:B]
+
+
+def stdp_update(
+    w: jax.Array,
+    x: jax.Array,
+    z: jax.Array,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+    *,
+    T: int = 8,
+    w_max: int = 7,
+    table: tuple,
+    mu_capture: float = 10 / 16,
+    mu_backoff: float = 6 / 16,
+    mu_search: float = 2 / 16,
+    block_p: int = 128,
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused STDP wave update. Returns new (p, q) i32 weights."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, p = x.shape
+    q = z.shape[1]
+    block_p = min(block_p, _pad_to(p, 8))
+    block_b = min(block_b, _pad_to(B, 8))
+    Bp, pp = _pad_to(B, block_b), _pad_to(p, block_p)
+    if (Bp, pp) != (B, p):
+        # padded batch rows: x=T & z=T -> 'none' case -> no update;
+        # padded synapse rows are sliced away.
+        x = jnp.pad(x, ((0, Bp - B), (0, pp - p)), constant_values=T)
+        z = jnp.pad(z, ((0, Bp - B), (0, 0)), constant_values=T)
+        w = jnp.pad(w, ((0, pp - p), (0, 0)))
+        u_up = jnp.pad(u_up, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
+        u_dn = jnp.pad(u_dn, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
+    out = stdp_update_pallas(
+        w, x, z, u_up, u_dn,
+        T=T, w_max=w_max, table=tuple(table),
+        mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
+        block_p=block_p, block_b=block_b, interpret=interpret,
+    )
+    return out[:p]
+
+
+def layer_forward_fused(
+    x: jax.Array, w: jax.Array, *, theta: int, T: int = 8, **kw
+) -> jax.Array:
+    """Whole-layer fused forward+WTA: x (B, C, p), w (C, p, q) -> (B, C, q).
+
+    vmap over columns adds a leading grid dimension to the Pallas call —
+    the layer's spatial replication (Fig. 1) in one launch.
+    """
+    f = functools.partial(column_forward, theta=theta, T=T, wta=True, **kw)
+    return jax.vmap(f, in_axes=(1, 0), out_axes=1)(x, w)

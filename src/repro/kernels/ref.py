@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These restate the paper's column semantics (see core/column.py) in the
+simplest possible form; kernel tests assert exact integer equality against
+them across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def column_forward_ref(x: jax.Array, w: jax.Array, theta: int, T: int) -> jax.Array:
+    """z[b, j] = min{t in [0,T): sum_i min(relu(t - x[b,i]), w[i,j]) >= theta} else T.
+
+    x: (B, p) integer spike times in [0, T]; w: (p, q) integer weights.
+    Returns (B, q) int32 spike times.
+    """
+    t = jnp.arange(T, dtype=jnp.int32)
+    ramp = jnp.maximum(t[None, None, :] - x[:, :, None].astype(jnp.int32), 0)  # (B,p,T)
+    resp = jnp.minimum(ramp[:, :, :, None], w.astype(jnp.int32)[None, :, None, :])
+    V = resp.sum(axis=1)  # (B, T, q)
+    crossed = V >= theta
+    z = jnp.where(crossed.any(axis=1), jnp.argmax(crossed, axis=1), T)
+    return z.astype(jnp.int32)
+
+
+def wta_ref(z: jax.Array, T: int) -> jax.Array:
+    """Earliest spike wins, ties to lowest index, losers -> T. z: (B, q)."""
+    zi = z.astype(jnp.int32)
+    winner = jnp.argmin(zi, axis=-1)
+    idx = jnp.arange(z.shape[-1], dtype=jnp.int32)
+    won = idx[None, :] == winner[:, None]
+    return jnp.where(won & (zi < T), zi, T).astype(jnp.int32)
+
+
+def stdp_ref(
+    w: jax.Array,
+    x: jax.Array,
+    z: jax.Array,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+    table: jax.Array,
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    w_max: int,
+    T: int,
+) -> jax.Array:
+    """Batched-sum STDP update (core/stdp.py 'sum' mode) with explicit uniforms.
+
+    w: (p, q); x: (B, p); z: (B, q); u_up/u_dn: (B, p, q) uniforms in [0,1).
+    Returns updated (p, q) int32 weights.
+    """
+    xs = x[:, :, None].astype(jnp.int32)
+    zs = z[:, None, :].astype(jnp.int32)
+    x_fired = xs < T
+    z_fired = zs < T
+    capture = x_fired & z_fired & (xs <= zs)
+    backoff = (x_fired & z_fired & (xs > zs)) | (~x_fired & z_fired)
+    search = x_fired & ~z_fired
+    f = table[w.astype(jnp.int32)][None]  # (1, p, q)
+    p_up = capture * (mu_capture * f) + search * jnp.float32(mu_search)
+    p_dn = backoff * (mu_backoff * f)
+    inc = (u_up < p_up).astype(jnp.int32).sum(axis=0)
+    dec = (u_dn < p_dn).astype(jnp.int32).sum(axis=0)
+    return jnp.clip(w.astype(jnp.int32) + inc - dec, 0, w_max).astype(jnp.int32)

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused STDP weight update.
+
+Fuses four of the paper's macros into one VMEM residency per weight tile:
+``stdp_case_gen`` (timing-case planes from x vs z), ``stabilize_func`` (the
+weight-indexed BRV probability table — computed as a polynomial-free select
+over the <=8 table entries, the vector analogue of the 8-to-1 GDI mux),
+``incdec`` (Bernoulli compare -> ±1) and ``syn_weight_update`` (saturating
+counter). Random uniforms are passed in explicitly so the kernel is a
+deterministic function checked exactly against ref.stdp_ref.
+
+Grid: (synapse tiles, batch tiles). The (Pt, q) inc/dec counters accumulate
+across batch tiles in VMEM scratch; the final batch tile applies the
+saturating update. Blocks: x (Bt, Pt), z (Bt, q), u (Bt, Pt, q) f32,
+w (Pt, q) i32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stdp_kernel(
+    w_ref, x_ref, z_ref, uu_ref, ud_ref, out_ref, net_ref,
+    *,
+    T: int,
+    w_max: int,
+    table: Sequence[float],
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+    n_b_tiles: int,
+):
+    bt_idx = pl.program_id(1)
+
+    @pl.when(bt_idx == 0)
+    def _init():
+        net_ref[...] = jnp.zeros_like(net_ref)
+
+    w = w_ref[...].astype(jnp.int32)  # (Pt, q)
+    x = x_ref[...].astype(jnp.int32)  # (Bt, Pt)
+    z = z_ref[...].astype(jnp.int32)  # (Bt, q)
+
+    xs = x[:, :, None]  # (Bt, Pt, 1)
+    zs = z[:, None, :]  # (Bt, 1, q)
+    x_fired = xs < T
+    z_fired = zs < T
+    capture = x_fired & z_fired & (xs <= zs)
+    backoff = (x_fired & z_fired & (xs > zs)) | (~x_fired & z_fired)
+    search = x_fired & ~z_fired
+
+    # stabilize_func: F[w] via select chain over the static table (the mux).
+    f = jnp.full(w.shape, table[0], dtype=jnp.float32)
+    for wv in range(1, w_max + 1):
+        f = jnp.where(w == wv, jnp.float32(table[wv]), f)
+    f = f[None, :, :]  # (1, Pt, q)
+
+    p_up = capture * (mu_capture * f) + search * jnp.float32(mu_search)
+    p_dn = backoff * (mu_backoff * f)
+    inc = (uu_ref[...] < p_up).astype(jnp.int32).sum(axis=0)  # (Pt, q)
+    dec = (ud_ref[...] < p_dn).astype(jnp.int32).sum(axis=0)
+    net_ref[...] += inc - dec
+
+    @pl.when(bt_idx == n_b_tiles - 1)
+    def _apply():
+        out_ref[...] = jnp.clip(w + net_ref[...], 0, w_max)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "T", "w_max", "table", "mu_capture", "mu_backoff", "mu_search",
+        "block_p", "block_b", "interpret",
+    ),
+)
+def stdp_update_pallas(
+    w: jax.Array,
+    x: jax.Array,
+    z: jax.Array,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+    *,
+    T: int = 8,
+    w_max: int = 7,
+    table: tuple = (),
+    mu_capture: float = 10 / 16,
+    mu_backoff: float = 6 / 16,
+    mu_search: float = 2 / 16,
+    block_p: int = 128,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """w: (p, q) ints; x: (B, p); z: (B, q); u_*: (B, p, q) f32 uniforms."""
+    B, p = x.shape
+    q = z.shape[1]
+    assert w.shape == (p, q) and u_up.shape == (B, p, q) and u_dn.shape == (B, p, q)
+    assert p % block_p == 0 and B % block_b == 0, (p, B, block_p, block_b)
+    assert q <= 128
+    if not table:
+        raise ValueError("pass the stabilization table explicitly")
+    n_p, n_b = p // block_p, B // block_b
+    kernel = functools.partial(
+        _stdp_kernel,
+        T=T, w_max=w_max, table=tuple(table),
+        mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
+        n_b_tiles=n_b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_p, n_b),
+        in_specs=[
+            pl.BlockSpec((block_p, q), lambda s, b: (s, 0)),
+            pl.BlockSpec((block_b, block_p), lambda s, b: (b, s)),
+            pl.BlockSpec((block_b, q), lambda s, b: (b, 0)),
+            pl.BlockSpec((block_b, block_p, q), lambda s, b: (b, s, 0)),
+            pl.BlockSpec((block_b, block_p, q), lambda s, b: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p, q), lambda s, b: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_p, q), jnp.int32)],
+        interpret=interpret,
+    )(w.astype(jnp.int32), x.astype(jnp.int32), z.astype(jnp.int32),
+      u_up.astype(jnp.float32), u_dn.astype(jnp.float32))

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused TNN column forward (RNL accumulate + threshold).
+
+This is the silicon's entire datapath — ``syn_output`` ramps feeding the
+``pac_adder`` parallel accumulative counter and the threshold comparator —
+re-tiled for the TPU memory hierarchy (DESIGN.md §2, §6):
+
+The RNL body potential factors into a 0/1 matmul over the merged
+(synapse, ramp-step) axis of size p*T:
+
+    V[b, t, j] = sum_{i,k} [x[b,i] + k <= t] * [k <= w[i,j]]
+               = (A @ N)[b*T + t, j]
+    A[(b,t), (i,k)] = [x[b,i] + k <= t]      (built on the fly from x)
+    N[(i,k), j]     = [k <= w[i,j]]          (built on the fly from w)
+
+so the MXU does the accumulation the pac_adder ripple chain does in silicon.
+Grid: (batch tiles, synapse tiles) with an f32 VMEM accumulator; on the
+last synapse tile the crossing time ``z = min{t : V >= theta}`` (and
+optionally the WTA mask) is computed in-register and written out.
+
+Block shapes: x (Bt, Pt) int32, w (Pt, q) int32, out (Bt, q) int32. The
+A tile is (Bt*T, Pt*T) bf16 and N is (Pt*T, q) bf16 — with the default
+Bt=64, Pt=256, T=8 that is 4 MiB + 0.5 MiB, comfortably inside the ~16 MiB
+v5e VMEM alongside the (Bt*T, q) accumulator. q stays un-tiled (<= 128
+lanes covers every column in the paper; ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _column_kernel(
+    x_ref, w_ref, z_ref, acc_ref, *, T: int, theta: int, n_p_tiles: int, wta: bool
+):
+    pt = pl.program_id(1)
+
+    bt = x_ref.shape[0]
+    p_tile = x_ref.shape[1]
+    q = w_ref.shape[1]
+
+    @pl.when(pt == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (Bt, Pt)
+    w = w_ref[...].astype(jnp.int32)  # (Pt, q)
+
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, p_tile, T), 2) + 1  # ramp step 1..T
+    t = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)  # wave position 0..T-1
+
+    # A[(b,t),(i,k)] = [x + k <= t]  — (Bt, Pt, T) vs t -> (Bt, T, Pt*T)
+    arrive = x[:, :, None] + k  # (Bt, Pt, T): earliest t this ramp step contributes
+    a = (arrive.reshape(bt, 1, p_tile * T) <= t[:, :, None]).astype(jnp.bfloat16)
+    # N[(i,k), j] = [k <= w]
+    n = (k.reshape(p_tile, T, 1) <= w[:, None, :]).astype(jnp.bfloat16)
+
+    v = jax.lax.dot_general(
+        a.reshape(bt * T, p_tile * T),
+        n.reshape(p_tile * T, q),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Bt*T, q)
+    acc_ref[...] += v
+
+    @pl.when(pt == n_p_tiles - 1)
+    def _finish():
+        V = acc_ref[...].reshape(bt, T, q)
+        crossed = V >= theta
+        tt = jax.lax.broadcasted_iota(jnp.int32, (bt, T, q), 1)
+        z = jnp.min(jnp.where(crossed, tt, T), axis=1)  # (Bt, q)
+        if wta:
+            qi = jax.lax.broadcasted_iota(jnp.int32, (bt, q), 1)
+            key = z * q + qi  # ties -> lowest index
+            winner = jnp.min(key, axis=1, keepdims=True)
+            z = jnp.where((key == winner) & (z < T), z, T)
+        z_ref[...] = z
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("theta", "T", "wta", "block_b", "block_p", "interpret"),
+)
+def column_forward_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    theta: int,
+    T: int = 8,
+    wta: bool = False,
+    block_b: int = 64,
+    block_p: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (B, p) int times in [0, T]; w: (p, q) int weights. Returns (B, q) i32.
+
+    Requires B % block_b == 0, p % block_p == 0, q <= 128 (ops.py pads).
+    """
+    B, p = x.shape
+    p2, q = w.shape
+    assert p == p2, (p, p2)
+    assert B % block_b == 0 and p % block_p == 0, (B, p, block_b, block_p)
+    assert q <= 128, "q is kept un-tiled; pad/partition columns beyond 128 neurons"
+
+    n_b, n_p = B // block_b, p // block_p
+    kernel = functools.partial(
+        _column_kernel, T=T, theta=theta, n_p_tiles=n_p, wta=wta
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_b, n_p),
+        in_specs=[
+            pl.BlockSpec((block_b, block_p), lambda b, s: (b, s)),
+            pl.BlockSpec((block_p, q), lambda b, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, q), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, q), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b * T, q), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))

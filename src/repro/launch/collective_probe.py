@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Diagnostic: top collective instructions (by modelled wire bytes) in one
+cell's unrolled cost compile — the §Perf hypothesis-forming tool."""
+import argparse
+import dataclasses
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import cell_by_name
+from repro.launch.dryrun import build_lowerable, _tuned, _dp_size
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RL
+from repro.sharding import partition as PT
+from repro.sharding.context import use_partitioning
+from repro.train import train_step as TS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--repeat", type=int, default=1)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--seq-parallel", type=int, default=0)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    cell = cell_by_name(args.cell)
+    prof = PT.RunProfile(fsdp=bool(args.fsdp),
+                         long_context=(cell.name == "long_500k"),
+                         seq_parallel=bool(args.seq_parallel))
+    if cell.kind == "decode":
+        cfg0 = get_config(args.arch)
+        prof = dataclasses.replace(
+            prof, fsdp=cfg0.n_params() * 2 / mesh.shape["model"] > 8e9)
+    tc = TS.TrainConfig()
+    cfg = _tuned(get_config(args.arch), mesh, tc, prof)
+    cfg = dataclasses.replace(cfg, layout_repeat=args.repeat, scan_layers=False,
+                              n_enc_layers=min(cfg.n_enc_layers, args.repeat)
+                              if cfg.n_enc_layers else 0)
+    fn, a, in_sh, out_sh = build_lowerable(cfg, cell, mesh, prof, tc)
+    from repro.models import layers as LYR
+    LYR.FLASH_UNROLL = True
+    with mesh, use_partitioning(mesh, PT.act_rules(mesh, prof)):
+        comp = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*a).compile()
+    text = comp.as_text()
+
+    per = defaultdict(lambda: [0, 0])
+    for line in text.splitlines():
+        m = RL._INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        size = RL._shape_bytes(dtype, dims)
+        g = RL._group_size(line, 256)
+        if g <= 1:
+            continue
+        wire = {"all-gather": size * (g - 1) // g,
+                "all-reduce": 2 * size * (g - 1) // g,
+                "reduce-scatter": size * (g - 1),
+                "all-to-all": size * (g - 1) // g,
+                "collective-permute": size}[kind]
+        key = f"{kind} {dtype}[{dims}] g={g}"
+        per[key][0] += wire
+        per[key][1] += 1
+    rows = sorted(per.items(), key=lambda kv: -kv[1][0])
+    total = sum(v[0] for v in per.values())
+    print(f"total modelled wire bytes (repeat={args.repeat}): {total/1e9:.2f} GB")
+    for k, (b, n) in rows[: args.top]:
+        print(f"  {b/1e9:8.3f} GB  x{n:<3d} {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,480 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell and each production mesh
+(16x16 single-pod, 2x16x16 multi-pod), lower + compile the step function
+against abstract inputs, then record memory analysis, cost analysis, and
+the collective schedule for the roofline table (EXPERIMENTS.md §Dry-run /
+§Roofline). Any sharding mismatch, compile-time OOM, or unsupported
+collective here is a bug in the system.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --cell all \
+        --mesh both --out experiments/dryrun
+"""
+__doc__ = DOC
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, cell_applicable
+from repro.configs.base import SHAPE_GRID, ModelConfig, ShapeCell
+from repro.launch import specs as SPECS
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.roofline import analysis as RL
+from repro.sharding import partition as PT
+from repro.sharding.context import use_partitioning
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+def _dp_size(mesh) -> int:
+    return int(mesh.shape.get("pod", 1) * mesh.shape["data"])
+
+
+def _tuned(cfg: ModelConfig, mesh, tc: TS.TrainConfig,
+           prof: Optional[PT.RunProfile] = None) -> ModelConfig:
+    """Per-mesh config hints (routing groups tile the token shards)."""
+    gb = _dp_size(mesh)
+    gs = int(mesh.shape["model"]) if (prof is not None and prof.seq_parallel) else 1
+    return dataclasses.replace(cfg, moe_groups=gb * gs, moe_group_shape=(gb, gs))
+
+
+def _replicated_tree(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def arg_bytes_per_chip(args, shardings) -> float:
+    """Per-device resident bytes of all inputs (params/opt/caches/batch),
+    from the actual NamedShardings (shard_shape accounts for padding)."""
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(args), jax.tree.leaves(shardings)):
+        shape = sh.shard_shape(sds.shape)
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * jnp.dtype(sds.dtype).itemsize
+    return float(total)
+
+
+def analytic_activation_bytes(cfg: ModelConfig, cell: ShapeCell, mesh) -> float:
+    """Checkpointed-residual + logits live bytes per chip (remat='full')."""
+    dp = _dp_size(mesh)
+    tp = int(mesh.shape["model"])
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        return float(B * cfg.d_model * 4 * cfg.n_layers / dp)  # tiny carries
+    n_ckpt = cfg.layout_repeat + len(cfg.layout_tail)
+    resid = n_ckpt * B * S * cfg.d_model * 2 / dp
+    v_shard = tp if cfg.vocab_size % tp == 0 else 1
+    logits = B * S * cfg.vocab_size * 4 / (dp * v_shard)
+    work = 4 * B * S * cfg.n_heads * cfg.head_dim * 4 / dp  # flash accum f32
+    if cell.kind == "prefill":
+        resid = B * S * cfg.d_model * 2 / dp * 2  # no grad residuals kept
+        logits = B * cfg.vocab_size * 4 / dp
+    return float(resid + logits + work)
+
+
+def model_flops_per_chip(cfg: ModelConfig, cell: ShapeCell, n_chips: int) -> float:
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        flops = 6.0 * n_active * cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        flops = 2.0 * n_active * cell.global_batch * cell.seq_len
+    else:  # decode: one token per sequence per step
+        flops = 2.0 * n_active * cell.global_batch
+    return flops / n_chips
+
+
+def build_lowerable(cfg: ModelConfig, cell: ShapeCell, mesh,
+                    prof: PT.RunProfile, tc: TS.TrainConfig):
+    """Returns (fn, args, in_shardings, out_shardings)."""
+    p_rules = PT.param_rules(mesh, prof)
+    a_rules = PT.act_rules(mesh, prof)
+    params_abs = M.abstract_params(cfg)
+    params_sh = PT.shardings_for_tree(params_abs, M.param_axes(cfg), mesh, p_rules)
+    dp = _dp_size(mesh)
+
+    def batch_shard(tree):
+        def one(sds):
+            div = sds.shape[0] % dp == 0 if sds.ndim else False
+            first = tuple(a for a in ("pod", "data") if a in mesh.shape) if div else None
+            rest = [None] * (sds.ndim - 1)
+            return NamedSharding(mesh, P(first, *rest) if sds.ndim else P())
+        return jax.tree.map(one, tree)
+
+    def cache_shard(cache_abs):
+        axes = M.cache_axes(cfg, cache_abs)
+        return PT.shardings_for_tree(cache_abs, axes, mesh, a_rules)
+
+    if cell.kind == "train":
+        opt_cfg = OPT.OptConfig(name=OPT.default_opt_for(cfg.n_params()))
+        step = TS.make_train_step(cfg, opt_cfg, tc)
+        state_abs = TS.abstract_state(cfg, opt_cfg)
+        state_sh = PT.shardings_for_tree(
+            state_abs, TS.state_axes(cfg, opt_cfg), mesh, p_rules)
+        batch_abs = SPECS.train_batch_specs(cfg, cell)
+        batch_sh = batch_shard(batch_abs)
+        out_abs = jax.eval_shape(step, state_abs, batch_abs)
+        out_sh = (state_sh, _replicated_tree(out_abs[1], mesh))
+        return step, (state_abs, batch_abs), (state_sh, batch_sh), out_sh
+
+    if cell.kind == "prefill":
+        prefill_fn, _ = TS.make_serve_steps(cfg, kv_chunk=tc.kv_chunk,
+                                            cast_weights=prof.fsdp)
+        sp = SPECS.prefill_specs(cfg, cell)
+        cache_sh = cache_shard(sp["cache"])
+        args = [params_abs, sp["tokens"], sp["cache"]]
+        in_sh = [params_sh, batch_shard(sp["tokens"]), cache_sh]
+        kw_names = []
+        for k in ("embeds", "frames"):
+            if k in sp:
+                args.append(sp[k])
+                in_sh.append(batch_shard(sp[k]))
+                kw_names.append(k)
+
+        def fn(params, tokens, cache, *extra):
+            kwargs = dict(zip(kw_names, extra))
+            return prefill_fn(params, tokens, cache, **kwargs)
+
+        out_abs = jax.eval_shape(fn, *args)
+        logits_sh = batch_shard(out_abs[0])
+        out_sh = (logits_sh, cache_sh)
+        return fn, tuple(args), tuple(in_sh), out_sh
+
+    # decode
+    _, decode_fn = TS.make_serve_steps(cfg, kv_chunk=tc.kv_chunk,
+                                       cast_weights=prof.fsdp)
+    sp = SPECS.decode_specs(cfg, cell)
+    cache_sh = cache_shard(sp["cache"])
+    args = (params_abs, sp["token"], sp["pos"], sp["cache"])
+    in_sh = (params_sh, batch_shard(sp["token"]),
+             NamedSharding(mesh, P()), cache_sh)
+    out_abs = jax.eval_shape(decode_fn, *args)
+    out_sh = (batch_shard(out_abs[0]), cache_sh)
+    return decode_fn, args, in_sh, out_sh
+
+
+def run_cell(arch: str, cell: ShapeCell, multi_pod: bool,
+             prof: PT.RunProfile = PT.RunProfile(),
+             tc: TS.TrainConfig = TS.TrainConfig(),
+             verbose: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.flat)
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, cell)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch} x {cell.name} x {mesh_name}"
+    if not ok:
+        if verbose:
+            print(f"[skip] {tag}: {why}")
+        return {"arch": arch, "cell": cell.name, "mesh": mesh_name,
+                "status": "skip", "reason": why}
+
+    # 2-axis TP for long-context serving pays off only when weight streaming
+    # dominates (≳1B params, dense); tiny models regress from reshard churn
+    # (§Perf xlstm measurement) and MoE experts interact badly with the
+    # wider shards (§Perf mixtral long_500k measurement) — gate on both.
+    prof = dataclasses.replace(
+        prof, long_context=(cell.name == "long_500k"
+                            and cfg.n_params() > 1e9 and not cfg.n_experts))
+    if cell.kind == "decode":
+        # serving profile: keep params TP-resident (no per-token FSDP
+        # all-gathers) whenever a 16-way TP shard fits comfortably in HBM;
+        # only the >100B archs keep 2D (FSDP x TP) weight sharding.
+        tp = int(mesh.shape["model"])
+        params_tp_bytes = cfg.n_params() * 2 / tp
+        prof = dataclasses.replace(prof, fsdp=params_tp_bytes > 8e9,
+                                   seq_parallel=False)
+    cfg = _tuned(cfg, mesh, tc, prof)
+    t0 = time.time()
+    result: Dict[str, Any] = {"arch": arch, "cell": cell.name, "mesh": mesh_name,
+                              "profile": dataclasses.asdict(prof)}
+    try:
+        a_rules = PT.act_rules(mesh, prof)
+        # 1) full scanned model: THE compile proof + memory analysis
+        fn, args, in_sh, out_sh = build_lowerable(cfg, cell, mesh, prof, tc)
+        with mesh:
+            with use_partitioning(mesh, a_rules):
+                lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_info: Dict[str, float] = {}
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_info[k] = float(v)
+        mem_info["analytic_args_bytes"] = arg_bytes_per_chip(args, in_sh)
+        mem_info["analytic_activation_bytes"] = analytic_activation_bytes(cfg, cell, mesh)
+        mem_info["analytic_total_bytes"] = (
+            mem_info["analytic_args_bytes"] + mem_info["analytic_activation_bytes"])
+        mem_info["fits_16g_hbm"] = mem_info["analytic_total_bytes"] < 16e9
+
+        # 2) per-layer cost extrapolation: XLA counts while-loop bodies once,
+        #    so lower unrolled repeat=1 and repeat=2 and extrapolate linearly.
+        costs = {}
+        from repro.models import layers as LYR
+        for R in (1, 2):
+            cfg_r = dataclasses.replace(
+                cfg, layout_repeat=R, scan_layers=False,
+                n_enc_layers=min(cfg.n_enc_layers, R) if cfg.n_enc_layers else 0)
+            fn_r, args_r, in_r, out_r = build_lowerable(cfg_r, cell, mesh, prof, tc)
+            LYR.FLASH_UNROLL = True  # flash chunk loop must unroll for costs
+            try:
+                with mesh:
+                    with use_partitioning(mesh, a_rules):
+                        comp_r = jax.jit(
+                            fn_r, in_shardings=in_r, out_shardings=out_r
+                        ).lower(*args_r).compile()
+            finally:
+                LYR.FLASH_UNROLL = False
+            ca = comp_r.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            stats = RL.parse_collectives(comp_r.as_text(), n_chips)
+            costs[R] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll": stats.bytes_by_kind,
+            }
+        Rf = cfg.layout_repeat
+
+        def extrap(a, b):
+            return a + max(b - a, 0.0) * (Rf - 1)
+
+        flops = extrap(costs[1]["flops"], costs[2]["flops"])
+        hbm = extrap(costs[1]["bytes"], costs[2]["bytes"])
+        coll = {
+            k: extrap(float(costs[1]["coll"][k]), float(costs[2]["coll"][k]))
+            for k in costs[1]["coll"]
+        }
+        mflops = model_flops_per_chip(cfg, cell, n_chips)
+        roof = RL.Roofline(
+            flops=flops, bytes_accessed=hbm,
+            collective_bytes=sum(coll.values()),
+            model_flops=mflops, collectives=coll,
+        )
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_info,
+            roofline=roof.report(),
+            collectives=roof.collectives,
+            per_layer_costs=costs,
+            n_params=cfg.n_params(),
+            n_active_params=cfg.n_active_params(),
+        )
+        if verbose:
+            r = roof.report()
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+                  f"bottleneck={r['bottleneck']} "
+                  f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                  f"{r['t_collective_s']:.2e})s "
+                  f"roofline={r['roofline_fraction']:.2%} "
+                  f"useful={r['useful_flop_fraction']:.2%}")
+    except Exception as e:  # noqa: BLE001 — report, keep sweeping
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR]  {tag}: {type(e).__name__}: {e}")
+    return result
+
+
+
+# ---------------------------------------------------------------------------
+# TNN cells — the paper's own architecture on the production mesh
+# ---------------------------------------------------------------------------
+
+TNN_CELLS = {
+    # one gamma wave of unsupervised STDP learning over a global image batch
+    "tnn_train_8k": ("train", 8192),
+    # inference-only wave (forward + WTA, no STDP)
+    "tnn_infer_64k": ("infer", 65536),
+}
+
+
+def _tnn_variant_cfg(cfg, impl: str, gauss: bool):
+    new_layers = []
+    for l in cfg.layers:
+        col = dataclasses.replace(
+            l.column, impl=impl,
+            stdp=dataclasses.replace(
+                l.column.stdp, batch_reduce="gauss" if gauss else "sum"))
+        new_layers.append(dataclasses.replace(l, column=col))
+    return dataclasses.replace(cfg, layers=tuple(new_layers))
+
+
+def run_tnn_cell(cell_name: str, multi_pod: bool, verbose: bool = True,
+                 column_parallel: bool = False, impl: str = "direct",
+                 gauss: bool = False) -> Dict[str, Any]:
+    """Dry-run the 2-layer MNIST prototype (Fig. 19) as a data-parallel wave
+    across the pod: batch sharded over every mesh axis; weights replicated
+    (their STDP deltas all-reduce). §Perf variants: ``column_parallel``
+    (columns padded 625->640, sharded over "model"), ``impl='matmul'``
+    (MXU-factorized forward), ``gauss`` (moment-matched batched STDP)."""
+    import jax.numpy as jnp
+    from repro.core import network_train_wave, network_forward, prototype_config
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.flat)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    kind, B = TNN_CELLS[cell_name]
+    sites = 640 if column_parallel else 625
+    cfg = _tnn_variant_cfg(prototype_config(sites=sites, theta1=20, theta2=6),
+                           impl, gauss)
+    variant = ("+colpar" if column_parallel else "") + \
+              ("+matmul" if impl == "matmul" else "") + ("+gauss" if gauss else "")
+    tag = f"tnn-mnist x {cell_name}{variant} x {mesh_name}"
+    result: Dict[str, Any] = {"arch": "tnn-mnist", "cell": cell_name,
+                              "mesh": mesh_name, "column_parallel": column_parallel,
+                              "impl": impl, "gauss": gauss}
+    t0 = time.time()
+    try:
+        x_abs = jax.ShapeDtypeStruct((B, sites, 32), jnp.int8)
+        w_abs = [jax.ShapeDtypeStruct((sites, 32, 12), jnp.int8),
+                 jax.ShapeDtypeStruct((sites, 12, 10), jnp.int8)]
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+        if column_parallel:
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            x_sh = NamedSharding(mesh, P(dp, "model", None))
+            w_sh = [NamedSharding(mesh, P("model", None, None))] * 2
+        else:
+            x_sh = NamedSharding(mesh, P(all_axes, None, None))
+            w_sh = [NamedSharding(mesh, P())] * 2
+        key_sh = NamedSharding(mesh, P())
+
+        if kind == "train":
+            def fn(ws, xb, key):
+                outs, new_ws = network_train_wave(xb, ws, cfg, key)
+                return new_ws, outs[-1]
+            args = (w_abs, x_abs, key_abs)
+            in_sh = (w_sh, x_sh, key_sh)
+            out_sh = (w_sh, NamedSharding(mesh, P(
+                all_axes if not column_parallel else
+                tuple(a for a in ("pod", "data") if a in mesh.shape), None, None)))
+        else:
+            def fn(ws, xb):
+                return network_forward(xb, ws, cfg)[-1]
+            args = (w_abs, x_abs)
+            in_sh = (w_sh, x_sh)
+            out_sh = NamedSharding(mesh, P(
+                all_axes if not column_parallel else
+                tuple(a for a in ("pod", "data") if a in mesh.shape), None, None))
+
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        stats = RL.parse_collectives(compiled.as_text(), n_chips)
+        # algorithmic ops/image: the V contraction at all T wave positions
+        per_img = sum(n * p * q * 16 for (n, p, q) in
+                      [(sites, 32, 12), (sites, 12, 10)])
+        if kind == "train":
+            per_img *= 1.5  # + STDP case-gen/update field
+        roof = RL.Roofline(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            collective_bytes=float(stats.total_bytes),
+            model_flops=per_img * B / n_chips,
+            collectives=dict(stats.bytes_by_kind))
+        mem = compiled.memory_analysis()
+        result.update(status="ok", compile_s=round(time.time() - t0, 2),
+                      roofline=roof.report(), collectives=roof.collectives,
+                      memory={"temp_size_in_bytes":
+                              float(getattr(mem, "temp_size_in_bytes", 0) or 0)})
+        if verbose:
+            r = roof.report()
+            print(f"[ok]   {tag}: compile {result['compile_s']}s | "
+                  f"bottleneck={r['bottleneck']} "
+                  f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+                  f"{r['t_collective_s']:.2e})s roofline={r['roofline_fraction']:.2%}")
+    except Exception as e:  # noqa: BLE001
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR]  {tag}: {type(e).__name__}: {e}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", default=1, type=int)
+    ap.add_argument("--kv-chunk", default=512, type=int)
+    args = ap.parse_args()
+
+    if args.arch == "tnn-mnist":
+        os.makedirs(args.out, exist_ok=True)
+        n_err = 0
+        meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+        variants = [  # (suffix, colpar, impl, gauss) — §Perf iteration ladder
+            ("", False, "direct", False),
+            ("_colpar", True, "direct", False),
+            ("_matmul", False, "matmul", False),
+            ("_matmul_gauss", False, "matmul", True),
+            ("_matmul_gauss_colpar", True, "matmul", True),
+        ]
+        for cell_name in TNN_CELLS:
+            for mp in meshes:
+                for sfx, colpar, impl, gauss in variants:
+                    if gauss and cell_name != "tnn_train_8k":
+                        continue  # gauss only affects the learning wave
+                    res = run_tnn_cell(cell_name, mp, column_parallel=colpar,
+                                       impl=impl, gauss=gauss)
+                    n_err += res["status"] == "error"
+                    fname = f"tnn-mnist__{cell_name}{sfx}__{res['mesh']}.json"
+                    with open(os.path.join(args.out, fname), "w") as f:
+                        json.dump(res, f, indent=1)
+        raise SystemExit(1 if n_err else 0)
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    cells = ([c for c in SHAPE_GRID] if args.cell == "all"
+             else [c for c in SHAPE_GRID if c.name in args.cell.split(",")])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    prof = PT.RunProfile(fsdp=bool(args.fsdp))
+    tc = TS.TrainConfig(kv_chunk=args.kv_chunk)
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                res = run_cell(arch, cell, mp, prof, tc)
+                n_ok += res["status"] == "ok"
+                n_err += res["status"] == "error"
+                n_skip += res["status"] == "skip"
+                fname = f"{arch.replace('.', '_')}__{cell.name}__{res['mesh']}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The production topology is a TPU v5e pod of 16x16 = 256 chips
+("data" x "model"); the multi-pod configuration stacks 2 pods on a leading
+"pod" axis (2 x 16 x 16 = 512 chips) — the pod axis carries data-parallel /
+FSDP traffic (DCI-friendly: gradient reduction only), or pipeline stages
+when RunProfile.pipeline is enabled.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests / examples): 1D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def describe(mesh) -> str:
+    return f"mesh{dict(mesh.shape)} on {len(mesh.devices.flat)} devices"

@@ -1,0 +1,70 @@
+"""Abstract input specs (ShapeDtypeStructs) for every (arch x shape) cell.
+
+The dry-run lowers against these — weak-type-correct, shardable, and never
+allocated. For stub-frontend archs ([audio]/[vlm]) the modality frontend's
+OUTPUT (frame/patch embeddings) is an input, per the assignment."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import model as M
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = _sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int) -> Any:
+    return jax.eval_shape(lambda: M.init_cache(cfg, B, S, jnp.bfloat16))
+
+
+def prefill_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    prefix = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+    out = {
+        "tokens": _sds((B, S), jnp.int32),
+        "cache": cache_specs(cfg, B, S + prefix),
+    }
+    if cfg.frontend == "vision_stub":
+        out["embeds"] = _sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    prefix = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+    return {
+        "token": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache_specs(cfg, B, S + prefix),
+    }
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """The dry-run entry: every model input for this cell, as SDS."""
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, cell)
+    if cell.kind == "decode":
+        return decode_specs(cfg, cell)
+    raise ValueError(cell.kind)

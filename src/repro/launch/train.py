@@ -1,0 +1,84 @@
+"""Production training launcher.
+
+On real hardware this builds the production mesh, installs sharding rules,
+and runs the fault-tolerant Trainer; on the CPU container it runs the same
+code path on the host mesh with a smoke config (--smoke), which is also how
+the integration test exercises it.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+        --steps 20 --batch 4 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh, describe
+from repro.models import model as M
+from repro.sharding import partition as PT
+from repro.sharding.context import use_partitioning
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the host mesh (CPU container)")
+    ap.add_argument("--production-mesh", choices=["single", "multi"], default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--micro-steps", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.production_mesh == "multi")
+    else:
+        mesh = make_host_mesh()
+    print(f"training {cfg.name} on {describe(mesh)}")
+
+    prof = PT.RunProfile()
+    opt_cfg = OPT.OptConfig(
+        name=OPT.default_opt_for(cfg.n_params()), lr=args.lr,
+        warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
+        compress_grads=args.compress_grads)
+    tc = TS.TrainConfig(micro_steps=args.micro_steps, kv_chunk=128)
+
+    state = TS.init_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    state_sh = PT.shardings_for_tree(
+        jax.eval_shape(lambda: state), TS.state_axes(cfg, opt_cfg), mesh,
+        PT.param_rules(mesh, prof))
+    state = jax.device_put(state, state_sh)
+
+    a_rules = PT.act_rules(mesh, prof)
+    raw_step = TS.make_train_step(cfg, opt_cfg, tc)
+
+    def step_fn(st, batch):
+        with mesh, use_partitioning(mesh, a_rules):
+            return jax.jit(raw_step, in_shardings=(state_sh, None),
+                           out_shardings=None)(st, batch)
+
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         ckpt_every=max(args.steps // 3, 5),
+                         ckpt_dir=args.ckpt_dir, log_every=5,
+                         metrics_path=args.ckpt_dir + "/metrics.jsonl")
+    trainer = Trainer(step_fn, state, stream, tcfg, shardings=state_sh)
+    trainer.install_preemption_handler()
+    print(trainer.run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+"""Transformer primitives: norms, RoPE, attention (GQA / MLA / SWA, train +
+prefill + decode forms), MLPs, embeddings. Pure functions over param dicts
+produced by ParamSpec trees (models/params.py).
+
+Attention uses a flash-style chunked online-softmax (`flash_attention`) so
+32k-token prefill never materializes an (S x S) score tensor; decode-time
+attention runs directly against the (possibly sequence-sharded) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.sharding.context import shard_activation
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(x: jax.Array, p: Dict, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_spec(vocab: int, d: int) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(tokens: jax.Array, p: Dict, dtype) -> jax.Array:
+    out = jnp.take(p["embedding"].astype(dtype), tokens, axis=0)
+    return shard_activation(out, ("batch", "seq", "embed"))
+
+
+def unembed(x: jax.Array, p: Dict) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, p["embedding"].astype(x.dtype))
+    return shard_activation(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, f: int, act: str) -> Dict[str, ParamSpec]:
+    if act == "swiglu":
+        return {
+            "wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wg": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def _pe(x: jax.Array) -> Dict:
+    """bf16 inputs -> keep the dot output (and therefore any SPMD partial-sum
+    all-reduce of it) in bf16 instead of XLA's default f32 accumulation dtype.
+    Halves row-parallel matmul collective bytes (EXPERIMENTS.md §Perf)."""
+    if x.dtype == jnp.bfloat16:
+        return {"preferred_element_type": jnp.bfloat16}
+    return {}
+
+
+def mlp(x: jax.Array, p: Dict, act: str) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    # rank-aware: decode-path activations are (B, f), train/prefill (B, S, f)
+    h = shard_activation(
+        h, ("batch", "mlp") if h.ndim == 2 else ("batch", "seq", "mlp"))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt), **_pe(h))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax) — train/prefill path
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+# When True, the flash KV-chunk loop is unrolled (python loop) instead of
+# lax.scan. Functionally identical; used by the dry-run's cost compiles
+# because XLA cost_analysis counts scan bodies once (launch/dryrun.py).
+FLASH_UNROLL = False
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_chunk: int = 512,
+    cross: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0.
+
+    Chunked online-softmax over KV; O(Sq * kv_chunk) live scores. ``window``
+    > 0 applies sliding-window masking (Mixtral SWA). ``cross=True`` disables
+    causal masking (encoder-decoder cross attention).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nchunks = max((Skv + kv_chunk - 1) // kv_chunk, 1)
+    pad = nchunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = (q.astype(jnp.float32) / (hd**0.5)).reshape(B, Sq, KV, rep, hd)
+    kc = k.reshape(B, nchunks, kv_chunk, KV, hd)
+    vc = v.reshape(B, nchunks, kv_chunk, KV, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, chunk):
+        acc, m, l = carry
+        kj, vj, j = chunk
+        s = jnp.einsum("bsgrh,bcgh->bsgrc", qf, kj.astype(jnp.float32))
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = (k_pos < Skv)[None, :]  # mask KV padding
+        if not cross:
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bsgrc,bcgh->bsgrh", p, vj.astype(jnp.float32)
+        )
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, KV, rep, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, rep), jnp.float32)
+    if FLASH_UNROLL:
+        carry = (acc0, m0, l0)
+        for j in range(nchunks):
+            carry, _ = body(carry, (kc[:, j], vc[:, j], j))
+        acc, m, l = carry
+    else:
+        ks = jnp.moveaxis(kc, 1, 0)
+        vs = jnp.moveaxis(vc, 1, 0)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0), (ks, vs, jnp.arange(nchunks))
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def cache_write(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write one token's K/V at position ``slot`` of a (B, S, ...) cache with a
+    masked select instead of dynamic_update_slice: elementwise over the
+    (possibly sequence-sharded) cache, so GSPMD never all-gathers it.
+    ``slot`` may be scalar or per-row (B,) (continuous batching)."""
+    S = cache.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    iota = jnp.arange(S, dtype=jnp.int32)
+    if slot.ndim == 0:
+        mask = (iota == slot).reshape((1, S) + (1,) * (cache.ndim - 2))
+    else:
+        mask = (iota[None, :] == slot[:, None]).reshape(
+            (cache.shape[0], S) + (1,) * (cache.ndim - 2))
+    return jnp.where(mask, new[:, None].astype(cache.dtype), cache)
+
+
+def _pos_vec(pos: jax.Array, B: int) -> jax.Array:
+    """Scalar or (B,) position -> (B,) int32."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos if pos.ndim else pos[None], (B,))
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, H, hd); caches: (B, S, KV, hd); length: () or (B,) valid length.
+    """
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    qf = (q.astype(jnp.float32) / (hd**0.5)).reshape(B, KV, rep, hd)
+    s = jnp.einsum("bgrh,bsgh->bgrs", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))  # (B or 1, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgh->bgrh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (shared by dense / moe / hybrid shared-attn)
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg) -> Dict[str, ParamSpec]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def gqa_qkv(x: jax.Array, p: Dict, cfg, positions: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "heads", None))
+    k = shard_activation(k, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def gqa_out(attn: jax.Array, p: Dict) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype),
+                      **_pe(attn))
+
+
+def gqa_attend_train(x, p, cfg, positions, kv_chunk: int = 512):
+    q, k, v = gqa_qkv(x, p, cfg, positions)
+    attn = flash_attention(
+        q, k, v, causal=True, window=cfg.sliding_window, kv_chunk=kv_chunk
+    )
+    return gqa_out(attn, p)
+
+
+def gqa_prefill(x, p, cfg, positions, kv_chunk: int = 512):
+    """Returns (out, (k, v)) — caches the full prefill K/V."""
+    q, k, v = gqa_qkv(x, p, cfg, positions)
+    attn = flash_attention(
+        q, k, v, causal=True, window=cfg.sliding_window, kv_chunk=kv_chunk
+    )
+    return gqa_out(attn, p), (k, v)
+
+
+def gqa_decode(x, p, cfg, cache: Tuple[jax.Array, jax.Array], pos: jax.Array):
+    """x: (B, d) one new token. cache: k/v (B, S, KV, hd); pos: () shared or
+    (B,) per-row position (continuous batching).
+
+    With sliding-window configured the cache is a ring buffer of size
+    ``window`` and positions index modulo it.
+    """
+    dt = x.dtype
+    k_cache, v_cache = cache
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    pos_b = _pos_vec(pos, B)
+    q = apply_rope(q[:, None], pos_b[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos_b[:, None], cfg.rope_theta)[:, 0]
+    slot = jnp.where(cfg.sliding_window > 0, pos_b % S, pos_b)
+    k_cache = cache_write(k_cache, k, slot)
+    v_cache = cache_write(v_cache, v, slot)
+    length = jnp.minimum(pos_b + 1, S)
+    out = decode_attention(q, k_cache, v_cache, length)
+    return gqa_out(out[:, None], p)[:, 0], (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-style)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, ropd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wdq": ParamSpec((d, rq), ("embed", "latent")),
+        "q_norm": ParamSpec((rq,), ("latent",), init="ones"),
+        "wuq": ParamSpec((rq, H, nope + ropd), ("latent", "heads", "head_dim")),
+        "wdkv": ParamSpec((d, rkv), ("embed", "latent")),
+        "kv_norm": ParamSpec((rkv,), ("latent",), init="ones"),
+        "wkr": ParamSpec((d, ropd), ("embed", None)),
+        "wuk": ParamSpec((rkv, H, nope), ("latent", "heads", "head_dim")),
+        "wuv": ParamSpec((rkv, H, vd), ("latent", "heads", "head_dim")),
+        "wo": ParamSpec((H, vd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_q(x, p, cfg, positions):
+    dt = x.dtype
+    nope = cfg.qk_nope_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wdq"].astype(dt))
+    cq = rmsnorm(cq, {"scale": p["q_norm"]}, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(x, p, cfg, positions):
+    dt = x.dtype
+    c = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(dt))
+    c = rmsnorm(c, {"scale": p["kv_norm"]}, cfg.norm_eps)
+    kr = jnp.einsum("bsd,dk->bsk", x, p["wkr"].astype(dt))
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, kr  # (B,S,rkv), (B,S,ropd)
+
+
+def mla_attend_train(x, p, cfg, positions, kv_chunk: int = 512):
+    out, _ = mla_prefill(x, p, cfg, positions, kv_chunk)
+    return out
+
+
+def mla_prefill(x, p, cfg, positions, kv_chunk: int = 512):
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    c, kr = _mla_ckv(x, p, cfg, positions)
+    # reconstruct full per-head K/V for the flash pass
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wuk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c, p["wuv"].astype(dt))
+    H = cfg.n_heads
+    k_rope = jnp.broadcast_to(kr[:, :, None, :], kr.shape[:2] + (H, kr.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # pad V's head_dim up to qk dim so flash can run one fused pass
+    vd, qk = cfg.v_head_dim, cfg.qk_nope_dim + cfg.qk_rope_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - vd))) if qk > vd else v
+    attn = flash_attention(q, k, v_p, causal=True, kv_chunk=kv_chunk)[..., :vd]
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(dt))
+    return out, (c, kr)
+
+
+def mla_decode(x, p, cfg, cache, pos):
+    """Absorbed-matrix MLA decode: attention runs in the rkv-dim latent space;
+    the cache stores only (c_kv, k_rope) — the paper-faithful KV compression.
+    x: (B, d); cache: (c (B,S,rkv), kr (B,S,ropd)).
+    """
+    dt = x.dtype
+    c_cache, kr_cache = cache
+    B = x.shape[0]
+    S = c_cache.shape[1]
+    pos_b = _pos_vec(pos, B)
+    q_nope, q_rope = _mla_q(x[:, None], p, cfg, pos_b[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (B,H,nope),(B,H,ropd)
+    c_new, kr_new = _mla_ckv(x[:, None], p, cfg, pos_b[:, None])
+    c_cache = cache_write(c_cache, c_new[:, 0], pos_b)
+    kr_cache = cache_write(kr_cache, kr_new[:, 0], pos_b)
+    # absorb W_uk into q: q_lat (B,H,rkv)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope, p["wuk"].astype(dt))
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c_cache.astype(jnp.float32))
+    s += jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    s /= (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
+    valid = jnp.arange(S)[None, None, :] <= pos_b[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, c_cache.astype(jnp.float32)).astype(dt)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["wuv"].astype(dt))  # absorb W_uv
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(dt))
+    return out, (c_cache, kr_cache)

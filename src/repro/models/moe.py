@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN (Mixtral / Grok-1: 8 experts, top-2 routing).
+
+GShard-style *local groups*: tokens are split into routing groups (one per
+data shard by default) and each group routes independently with a local
+capacity ``C = ceil(tokens_per_group * top_k / E * capacity_factor)``. All
+dispatch/combine work is group-local, so under pjit the only collectives are
+the usual FSDP/TP parameter gathers — no all-to-all is required at this
+expert count (experts are replicated across data, tensor-sharded on d_ff).
+
+Dispatch is scatter-based (positions via masked cumsum), not one-hot-matmul,
+so the routing tensors stay O(tokens * E) rather than O(tokens * E * C).
+Dropped-token behaviour (capacity overflow) matches GShard: overflowing
+tokens fall through with a zero expert contribution (residual carries them).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.sharding.context import shard_activation
+
+
+def moe_spec(cfg) -> Dict[str, ParamSpec]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "wi": ParamSpec((E, d, f), ("expert", "embed", "mlp")),
+        "wg": ParamSpec((E, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((E, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def moe_ffn(x: jax.Array, p: Dict, cfg, n_groups: int = 0) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). top-k routing with local groups.
+
+    Groups tile the (batch, seq) grid EXACTLY like the mesh shards it
+    (``moe_group_shape = (batch_shards, seq_shards)``), so regrouping is a
+    shard-local transpose — no resharding collectives (§Perf mixtral it. 3).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    dt = x.dtype
+    tokens = B * S
+    if n_groups:  # explicit override (decode path: tiny token counts want
+        #            replicated dispatch + activation-side partial sums, not
+        #            sharded groups that pull weight gathers — §Perf notes)
+        gb, gs = n_groups, 1
+    else:
+        gb, gs = getattr(cfg, "moe_group_shape", ()) or (cfg.moe_groups or 1, 1)
+    while B % gb:
+        gb //= 2
+    while S % gs:
+        gs //= 2
+    G = gb * gs
+    g_tokens = tokens // G
+    cap = int((g_tokens * k / E) * cfg.moe_capacity_factor) + 1
+
+    xg = (x.reshape(gb, B // gb, gs, S // gs, d)
+          .transpose(0, 2, 1, 3, 4)
+          .reshape(G, g_tokens, d))
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt)).astype(jnp.float32)
+    gate, idx = jax.lax.top_k(logits, k)  # (G, T, k)
+    gate = jax.nn.softmax(gate, axis=-1).astype(dt)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (G, T, k, E)
+    flat = onehot.reshape(G, g_tokens * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1  # (G, T*k, E)
+    pos = (pos * flat).sum(-1).reshape(G, g_tokens, k)  # (G, T, k)
+    keep = pos < cap
+    gate = gate * keep.astype(dt)
+
+    # scatter tokens into (G, E, C, d) buffers. The scatter/gather pair is
+    # vmapped over the group axis so GSPMD sees G as a scatter *batch* dim
+    # and keeps dispatch fully local to each data shard (no all-reduce of
+    # the dispatch buffers — see EXPERIMENTS.md §Perf mixtral iteration 1).
+    e_idx = jnp.where(keep, idx, 0)
+    c_idx = jnp.where(keep, pos, cap - 1)
+    contrib = jnp.where(keep[..., None], xg[:, :, None, :], 0).astype(dt)
+
+    def scatter_group(xg_g, e_g, c_g):
+        # xg_g: (T, k, d); e_g/c_g: (T, k) -> (E, C, d)
+        buf_g = jnp.zeros((E, cap, d), dt)
+        return buf_g.at[e_g, c_g].add(xg_g, mode="drop")
+
+    buf = jax.vmap(scatter_group)(contrib, e_idx, c_idx)
+    buf = shard_activation(buf, ("exp_group", None, None, "embed"))
+
+    # expert FFN (tensor-parallel on d_ff)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(dt))
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(dt))
+    h = jax.nn.silu(g_) * h
+    h = shard_activation(h, ("exp_group", None, None, "mlp"))
+    from repro.models.layers import _pe
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt), **_pe(h))
+    y = shard_activation(y, ("exp_group", None, None, "embed"))
+
+    def gather_group(y_g, e_g, c_g):
+        return y_g[e_g, c_g]  # (T, k, d)
+
+    out = jax.vmap(gather_group)(y, e_idx, c_idx) * gate[..., None]
+    out = (out.sum(axis=2)
+           .reshape(gb, gs, B // gb, S // gs, d)
+           .transpose(0, 2, 1, 3, 4)
+           .reshape(B, S, d))
+    return shard_activation(out, ("batch", "seq", "embed"))

@@ -1,0 +1,75 @@
+"""Parameter specification trees — single source of truth for shape, logical
+sharding axes, and initialization of every model parameter.
+
+A model is declared as a pytree of :class:`ParamSpec`. From that one tree we
+derive: abstract params (ShapeDtypeStructs — the dry-run never allocates),
+materialized params (for smoke tests / real training), and NamedShardings
+(via sharding/partition.py rules applied to the logical ``axes``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (None = never sharded)
+    init: str = "normal"  # normal | zeros | ones | scaled
+    dtype: Any = jnp.float32
+    scale: Optional[float] = None  # stddev override for init
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_abstract(specs) -> Any:
+    """Spec tree -> ShapeDtypeStruct tree (no allocation; dry-run input)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def _materialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    std = spec.scale
+    if std is None:
+        # fan-in scaled normal: last axis is the output axis by convention
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+        std = min(0.02, (1.0 / max(fan_in, 1)) ** 0.5)
+    return std * jax.random.normal(key, spec.shape, spec.dtype)
+
+
+def tree_init(specs, key: jax.Array) -> Any:
+    """Spec tree -> materialized param tree (fold keys over leaves)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_axes(specs) -> Any:
+    """Spec tree -> logical-axes tree (same structure, tuples at leaves)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layers"):
+    """Stack a block's spec tree n times along a new leading 'layers' axis
+    (for lax.scan over layers — keeps HLO size O(1) in depth)."""
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.dtype, s.scale)
+
+    return jax.tree.map(stack, spec_tree, is_leaf=is_spec)

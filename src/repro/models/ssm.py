@@ -1,0 +1,404 @@
+"""Recurrent/state-space blocks: Mamba2 (zamba2), mLSTM + sLSTM (xLSTM).
+
+All three share one computational skeleton — a gated linear recurrence over
+matrix state  ``H_t = a_t * H_{t-1} + b_t x_t^T`` read out as ``y_t = c_t H_t``
+— which we evaluate with the **chunked** algorithm (Mamba2's SSD): intra-chunk
+terms via an (L x L) decay-masked product, inter-chunk carry via a short
+lax.scan. O(S * L) memory, MXU-dense, and exactly equal to the sequential
+recurrence (fp32 accumulation; per-chunk max-shift stabilization for the
+exponential-gated mLSTM).
+
+Decode keeps the constant-size recurrent state — the reason these archs run
+the long_500k cell that full attention cannot (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.sharding.context import shard_activation
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked linear recurrence
+#   state H: (B, heads, N, P);  a: (B, S, h) decay in (0,1] (log provided)
+#   b: (B, S, h, N) input key;  xv: (B, S, h, P) input value; c: (B, S, h, N)
+#   y[t] = c_t @ H_t,  H_t = a_t H_{t-1} + b_t xv_t^T
+# ---------------------------------------------------------------------------
+
+
+def chunked_lrnn(
+    log_a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    xv: jax.Array,
+    h0: jax.Array,
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,h,P), h_final (B,h,N,P)). All math in fp32."""
+    B, S, h, N = b.shape
+    P = xv.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+
+    la = log_a.astype(jnp.float32).reshape(B, nc, L, h)
+    bf = b.astype(jnp.float32).reshape(B, nc, L, h, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, L, h, N)
+    xf = xv.astype(jnp.float32).reshape(B, nc, L, h, P)
+
+    cum = jnp.cumsum(la, axis=2)  # (B,nc,L,h) inclusive cumlog within chunk
+    total = cum[:, :, -1]  # (B,nc,h)
+
+    # intra-chunk: y_intra[i] = sum_{j<=i} exp(cum_i - cum_j) * (c_i.b_j) xv_j
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,h)
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    g = jnp.einsum("bnihk,bnjhk->bnijh", cf, bf) * jnp.exp(decay)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", g, xf)
+
+    # chunk-boundary states: carry_in contribution + within-chunk injection
+    # state_in_chunk = exp(total - cum_j) b_j xv_j^T summed over j
+    w = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,L,h)
+    inj = jnp.einsum("bnjh,bnjhk,bnjhp->bnhkp", w, bf, xf)  # (B,nc,h,N,P)
+
+    def scan_fn(hprev, xs):
+        tot, inj_c = xs  # (B,h), (B,h,N,P)
+        hnew = jnp.exp(tot)[..., None, None] * hprev + inj_c
+        return hnew, hprev  # emit state *entering* the chunk
+
+    tot_s = jnp.moveaxis(total, 1, 0)  # (nc,B,h)
+    inj_s = jnp.moveaxis(inj, 1, 0)
+    h_final, h_in = jax.lax.scan(scan_fn, h0.astype(jnp.float32), (tot_s, inj_s))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,h,N,P) state entering each chunk
+
+    # inter-chunk: y_inter[i] = exp(cum_i) * c_i @ h_in
+    y_inter = jnp.einsum("bnihk,bnhkp->bnihp", cf * jnp.exp(cum)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(B, S, h, P)
+    return y, h_final
+
+
+def lrnn_decode_step(
+    log_a: jax.Array, b: jax.Array, c: jax.Array, xv: jax.Array, h: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrence step. log_a: (B,h); b,c: (B,h,N); xv: (B,h,P); h: (B,h,N,P)."""
+    hf = h.astype(jnp.float32)
+    hn = jnp.exp(log_a.astype(jnp.float32))[..., None, None] * hf + jnp.einsum(
+        "bhk,bhp->bhkp", b.astype(jnp.float32), xv.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhk,bhkp->bhp", c.astype(jnp.float32), hn)
+    return y, hn
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+
+def mamba_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    heads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * N
+    return {
+        "win": ParamSpec((d, 2 * d_in + 2 * N + heads), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((heads,), (None,), init="zeros"),
+        "dt_bias": ParamSpec((heads,), (None,), init="zeros"),
+        "skip_d": ParamSpec((heads,), (None,), init="ones"),
+        "norm": ParamSpec((d_in,), ("mlp",), init="ones"),
+        "wout": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_split(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, N, heads
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d along seq. xbc: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for k in range(K):
+        out = out + pad[:, k : k + xbc.shape[1], :] * w[k]
+    return jax.nn.silu(out + b)
+
+
+def mamba_train(x: jax.Array, p: Dict, cfg, chunk: int = 256) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Chunked SSD scan, no cache."""
+    y, _, _ = _mamba_run(x, p, cfg, h0=None, conv_state=None, chunk=chunk)
+    return y
+
+
+def mamba_init_state(cfg, B: int, dtype):
+    d_in, N, heads = _mamba_split(cfg)
+    conv_ch = d_in + 2 * N
+    return (
+        jnp.zeros((B, heads, N, cfg.ssm_head_dim), jnp.float32),
+        jnp.zeros((B, cfg.conv_width - 1, conv_ch), dtype),
+    )
+
+
+def _mamba_run(x, p, cfg, h0, conv_state, chunk):
+    B, S, d = x.shape
+    d_in, N, heads = _mamba_split(cfg)
+    dt_ = x.dtype
+    z_x_bc_dt = jnp.einsum("bsd,de->bse", x, p["win"].astype(dt_))
+    z, xs, B_in, C_in, dt_raw = jnp.split(
+        z_x_bc_dt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    xbc = jnp.concatenate([xs, B_in, C_in], axis=-1)
+    if conv_state is not None:
+        xbc_ext = jnp.concatenate([conv_state, xbc], axis=1)
+        new_conv = xbc_ext[:, -(cfg.conv_width - 1) :, :]
+        K = p["conv_w"].shape[0]
+        pad = jnp.pad(xbc_ext, ((0, 0), (max(K - 1 - conv_state.shape[1], 0), 0), (0, 0)))
+        out = sum(
+            pad[:, k : k + S, :] * p["conv_w"].astype(dt_)[k] for k in range(K)
+        )
+        xbc = jax.nn.silu(out + p["conv_b"].astype(dt_))
+    else:
+        new_conv = None
+        xbc = _causal_conv(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xs, B_in, C_in = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (h,) negative
+    log_a = dt * A  # (B,S,h)
+    xh = xs.reshape(B, S, heads, cfg.ssm_head_dim)
+    bh = jnp.broadcast_to(B_in[:, :, None, :], (B, S, heads, N)) * dt[..., None]
+    ch = jnp.broadcast_to(C_in[:, :, None, :], (B, S, heads, N))
+    h0 = h0 if h0 is not None else jnp.zeros((B, heads, N, cfg.ssm_head_dim), jnp.float32)
+    y, h_fin = chunked_lrnn(log_a, bh, ch, xh, h0, chunk)
+    y = y.astype(dt_) + xh * p["skip_d"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_) * p[
+        "norm"
+    ].astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["wout"].astype(dt_))
+    return shard_activation(out, ("batch", "seq", "embed")), h_fin, new_conv
+
+
+def mamba_decode(x: jax.Array, p: Dict, cfg, state) -> Tuple[jax.Array, Tuple]:
+    """x: (B, d) one token; state = (h (B,h,N,P) f32, conv (B,K-1,C)).
+
+    Direct single-step recurrence (lrnn_decode_step) — bypasses the chunked
+    SSD machinery entirely: ~4x fewer intermediates per decode step
+    (EXPERIMENTS.md §Perf zamba2 iteration 3)."""
+    h, conv = state
+    B, d = x.shape
+    d_in, N, heads = _mamba_split(cfg)
+    dt_ = x.dtype
+    z_x_bc_dt = jnp.einsum("bd,de->be", x, p["win"].astype(dt_))
+    z, xs, B_in, C_in, dt_raw = jnp.split(
+        z_x_bc_dt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xs, B_in, C_in], axis=-1)  # (B, C)
+    # causal conv over the stored K-1 inputs + this one
+    hist = jnp.concatenate([conv.astype(dt_), xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(dt_)  # (K, C)
+    out = (hist * w[None]).sum(axis=1) + p["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(out)
+    new_conv = hist[:, 1:, :].astype(conv.dtype)
+    xs, B_in, C_in = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_a = dt * A
+    xh = xs.reshape(B, heads, cfg.ssm_head_dim)
+    bh = jnp.broadcast_to(B_in[:, None, :], (B, heads, N)) * dt[..., None]
+    ch = jnp.broadcast_to(C_in[:, None, :], (B, heads, N))
+    y, h_new = lrnn_decode_step(log_a, bh, ch, xh, h)
+    y = y.astype(dt_) + xh * p["skip_d"].astype(dt_)[None, :, None]
+    y = y.reshape(B, d_in) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    y = y * p["norm"].astype(dt_)
+    return jnp.einsum("be,ed->bd", y, p["wout"].astype(dt_)), (h_new, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — exponential-gated matrix memory
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dk = d_in // H
+    return {
+        "wup": ParamSpec((d, 2 * d_in), ("embed", "mlp")),
+        "wq": ParamSpec((d_in, H, dk), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((d_in, H, dk), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((d_in, H, dk), ("mlp", "heads", "head_dim")),
+        "wif": ParamSpec((d_in, 2 * H), ("mlp", None), scale=0.01),
+        "bif": ParamSpec((2 * H,), (None,), init="zeros"),
+        "norm": ParamSpec((d_in,), ("mlp",), init="ones"),
+        "wdown": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_gates(xi: jax.Array, p: Dict, H: int):
+    gf = jnp.einsum("...e,eg->...g", xi.astype(jnp.float32), p["wif"].astype(jnp.float32))
+    gf = gf + p["bif"].astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gf, 2, axis=-1)  # (..., H) each
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid(f): in (-inf, 0)
+    log_i = jnp.minimum(i_raw, 0.0) - 2.0  # bounded exponential input gate
+    return log_i, log_f
+
+
+def mlstm_train(x: jax.Array, p: Dict, cfg, chunk: int = 256) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dt_ = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["wup"].astype(dt_))
+    xi, z = jnp.split(up, 2, axis=-1)  # (B,S,d_in) each
+    q = jnp.einsum("bse,ehk->bshk", xi, p["wq"].astype(dt_))
+    k = jnp.einsum("bse,ehk->bshk", xi, p["wk"].astype(dt_))
+    v = jnp.einsum("bse,ehk->bshk", xi, p["wv"].astype(dt_))
+    log_i, log_f = _mlstm_gates(xi, p, H)  # (B,S,H)
+    dk = q.shape[-1]
+    kin = k.astype(jnp.float32) * jnp.exp(log_i)[..., None] / (dk**0.5)
+    h0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+    y, _ = chunked_lrnn(log_f, kin, q.astype(jnp.float32), v.astype(jnp.float32), h0, chunk)
+    # normalizer state: same recurrence with value=1
+    ones = jnp.ones(v.shape[:-1] + (1,), jnp.float32)
+    n0 = jnp.zeros((B, H, dk, 1), jnp.float32)
+    nrm, _ = chunked_lrnn(log_f, kin, q.astype(jnp.float32), ones, n0, chunk)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(B, S, -1).astype(dt_)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    y = y * p["norm"].astype(dt_)
+    return jnp.einsum("bse,ed->bsd", y, p["wdown"].astype(dt_))
+
+
+def mlstm_init_state(cfg, B: int):
+    H = cfg.n_heads
+    dk = cfg.ssm_expand * cfg.d_model // H
+    return (
+        jnp.zeros((B, H, dk, dk), jnp.float32),  # matrix memory
+        jnp.zeros((B, H, dk, 1), jnp.float32),  # normalizer
+    )
+
+
+def mlstm_decode(x: jax.Array, p: Dict, cfg, state) -> Tuple[jax.Array, Tuple]:
+    Hm, n = state
+    B, d = x.shape
+    H = cfg.n_heads
+    dt_ = x.dtype
+    up = jnp.einsum("bd,de->be", x, p["wup"].astype(dt_))
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("be,ehk->bhk", xi, p["wq"].astype(dt_))
+    k = jnp.einsum("be,ehk->bhk", xi, p["wk"].astype(dt_))
+    v = jnp.einsum("be,ehk->bhk", xi, p["wv"].astype(dt_))
+    log_i, log_f = _mlstm_gates(xi, p, H)  # (B,H)
+    dk = q.shape[-1]
+    kin = k.astype(jnp.float32) * jnp.exp(log_i)[..., None] / (dk**0.5)
+    y, Hm = lrnn_decode_step(log_f, kin, q, v, Hm)
+    ones = jnp.ones((B, H, 1), jnp.float32)
+    nv, n = lrnn_decode_step(log_f, kin, q, ones, n)
+    y = y / jnp.maximum(jnp.abs(nv), 1.0)
+    y = y.reshape(B, -1).astype(dt_) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    y = y * p["norm"].astype(dt_)
+    return jnp.einsum("be,ed->bd", y, p["wdown"].astype(dt_)), (Hm, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, strictly sequential recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "wx": ParamSpec((d, 4 * d), ("embed", "mlp")),  # z,i,f,o pre-acts
+        "wr": ParamSpec((H, dh, 4 * dh), (None, "head_dim", None), scale=0.05),
+        "b": ParamSpec((4 * d,), ("mlp",), init="zeros"),
+        "norm": ParamSpec((d,), ("embed",), init="ones"),
+        "wff1": ParamSpec((d, cfg.ssm_expand * d), ("embed", "mlp")),
+        "wff2": ParamSpec((cfg.ssm_expand * d, d), ("mlp", "embed")),
+    }
+
+
+def slstm_init_state(cfg, B: int):
+    d = cfg.d_model
+    return (
+        jnp.zeros((B, d), jnp.float32),  # c
+        jnp.zeros((B, d), jnp.float32),  # n
+        jnp.zeros((B, d), jnp.float32),  # h
+        jnp.full((B, d), -10.0, jnp.float32),  # m (stabilizer)
+    )
+
+
+def _slstm_cell(carry, xt, p, cfg):
+    c, n, h, m = carry
+    H = cfg.n_heads
+    d = c.shape[-1]
+    dh = d // H
+    B = c.shape[0]
+    hh = h.reshape(B, H, dh)
+    # recurrent contribution is head-block-diagonal; regroup per-head
+    # (z,i,f,o) quarters into the [z | i | f | o] layout of the wx preacts
+    rec = jnp.einsum("bhk,hkg->bhg", hh, p["wr"].astype(jnp.float32))
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    pre = xt.astype(jnp.float32) + rec
+    z, i_raw, f_raw, o = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_train(x: jax.Array, p: Dict, cfg) -> jax.Array:
+    """Strictly sequential over S (the sLSTM's nature) via lax.scan."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    pre = jnp.einsum("bsd,dg->bsg", x, p["wx"].astype(dt_)) + p["b"].astype(dt_)
+
+    def step(carry, xt):
+        new = _slstm_cell(carry, xt, p, cfg)
+        return new, new[2]
+
+    init = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(dt_)  # (B,S,d)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    h = (h.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    h = h * p["norm"].astype(dt_)
+    f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["wff1"].astype(dt_)))
+    return jnp.einsum("bsf,fd->bsd", f, p["wff2"].astype(dt_))
+
+
+def slstm_decode(x: jax.Array, p: Dict, cfg, state) -> Tuple[jax.Array, Tuple]:
+    dt_ = x.dtype
+    pre = jnp.einsum("bd,dg->bg", x, p["wx"].astype(dt_)) + p["b"].astype(dt_)
+    new = _slstm_cell(state, pre, p, cfg)
+    h = new[2].astype(dt_)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    h = (h.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    h = h * p["norm"].astype(dt_)
+    f = jax.nn.gelu(jnp.einsum("bd,df->bf", h, p["wff1"].astype(dt_)))
+    return jnp.einsum("bf,fd->bd", f, p["wff2"].astype(dt_)), new

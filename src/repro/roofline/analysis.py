@@ -1,0 +1,181 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step-per-chip:
+
+    compute    = HLO_FLOPs            / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_accessed   / HBM_bandwidth     (819 GB/s)
+    collective = collective_bytes     / ICI_link_bw       (~50 GB/s/link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the partitioned
+per-device module). Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD HLO text and sum modelled wire bytes for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, using ring
+costs over the instruction's replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[2048,512]{1,0} all-reduce(...), replica_groups=...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\b"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # iota [ngroups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 256) -> CollectiveStats:
+    """Sum modelled per-device wire bytes for every collective instruction.
+
+    Ring-model wire cost per participating device, with S = result bytes:
+        all-gather:        S * (g-1)/g          (result is the gathered full)
+        all-reduce:        2 * S * (g-1)/g      (reduce-scatter + all-gather)
+        reduce-scatter:    S * (g-1)            (result is one shard)
+        all-to-all:        S * (g-1)/g
+        collective-permute: S                   (one hop)
+    """
+    bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        # fusion/async wrappers (x-start/x-done) appear as separate kinds
+        size = _shape_bytes(dtype, dims)
+        g = _group_size(line, default_group)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = size * (g - 1) // g
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) // g
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) // g
+        else:  # collective-permute
+            wire = size
+        bytes_by[kind] += wire
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float  # useful (algorithmic) flops per device
+    collectives: Dict[str, int]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        bound of its slowest term: (model_flops/peak) / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.t_bound
+
+    def report(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.bytes_accessed,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "model_flops_per_chip": self.model_flops,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, model_flops_per_chip: float,
+                  default_group: int = 256) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text(), default_group)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=float(stats.total_bytes),
+        model_flops=model_flops_per_chip,
+        collectives=dict(stats.bytes_by_kind),
+    )

@@ -1,0 +1,41 @@
+"""Baseline-vs-optimized sweep comparison (EXPERIMENTS.md §Perf system-wide).
+
+    PYTHONPATH=src python -m repro.roofline.compare experiments/dryrun \
+        experiments/dryrun_v2
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.roofline.report import load_all
+
+
+def main() -> None:
+    base_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    opt_dir = sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun_v2"
+    base = {(r["arch"], r["cell"], r["mesh"]): r for r in load_all(base_dir)}
+    opt = {(r["arch"], r["cell"], r["mesh"]): r for r in load_all(opt_dir)}
+    print("| arch | cell | mesh | bound t before | after | Δ | roofline before | after |")
+    print("|---|---|---|---|---|---|---|---|")
+    improved = regressed = 0
+    for key in sorted(base):
+        b, o = base[key], opt.get(key)
+        if not o or b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        rb, ro = b["roofline"], o["roofline"]
+        tb = max(rb["t_compute_s"], rb["t_memory_s"], rb["t_collective_s"])
+        to = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        delta = (to - tb) / tb if tb else 0.0
+        if delta < -0.02:
+            improved += 1
+        elif delta > 0.02:
+            regressed += 1
+        print(f"| {key[0]} | {key[1]} | {key[2]} | {tb:.3g} | {to:.3g} | "
+              f"{delta:+.1%} | {rb['roofline_fraction']:.2%} | "
+              f"{ro['roofline_fraction']:.2%} |")
+    print(f"\n**{improved} cells improved >2%, {regressed} regressed >2% "
+          f"(of {len(base)} baseline cells).**")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report experiments/dryrun > tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load_all(d: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def _one_sentence_fix(r: Dict) -> str:
+    """What would move the dominant term down (per-cell guidance)."""
+    b = r["roofline"]["bottleneck"]
+    arch, cell = r["arch"], r["cell"]
+    if b == "compute":
+        if r["roofline"]["useful_flop_fraction"] < 0.5:
+            return ("shard the replicated attention path (sequence-parallel "
+                    "q/k/v) and skip fully-masked causal KV chunks")
+        return "already near useful-compute bound; fuse small elementwise ops"
+    if b == "memory":
+        return ("cut f32 intermediate materialization in the flash/score "
+                "chain (bf16 accum tiles via the Pallas path) and enlarge "
+                "kv_chunk to amortize operand re-reads")
+    return ("reduce wire bytes: reduce-scatter gradients instead of "
+            "all-reduce, overlap FSDP gathers with compute, or drop FSDP "
+            "for the serving path")
+
+
+def dryrun_section(rows: List[Dict]) -> str:
+    out = ["## §Dry-run\n",
+           "Every cell = `jit(step).lower(abstract inputs).compile()` on the "
+           "production mesh (single-pod 16x16 = 256 chips, multi-pod 2x16x16 "
+           "= 512 chips; 512 forced host devices). `ok` = compiled; skips "
+           "are the documented long_500k full-attention exclusions.\n",
+           "| arch | cell | mesh | status | compile s | per-chip args | "
+           "analytic resident | fits 16G |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("arch") == "tnn-mnist":
+            continue
+        mem = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['status']} | "
+            f"{r.get('compile_s', '—')} | "
+            f"{_fmt_bytes(mem.get('analytic_args_bytes', 0)) if mem else '—'} | "
+            f"{_fmt_bytes(mem.get('analytic_total_bytes', 0)) if mem else '—'} | "
+            f"{'yes' if mem.get('fits_16g_hbm') else ('—' if r['status'] != 'ok' else 'NO')} |")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    out.append(f"\n**{n_ok} compiled, {n_skip} documented skips, {n_err} errors.**\n")
+    return "\n".join(out)
+
+
+def roofline_section(rows: List[Dict]) -> str:
+    out = ["## §Roofline\n",
+           "Terms in seconds/step/chip: compute = HLO_FLOPs/197TF; memory = "
+           "HLO bytes/819GB/s; collective = modelled ring wire-bytes/50GB/s "
+           "(per-layer costs measured on unrolled 1-vs-2-layer compiles and "
+           "extrapolated — XLA counts loop bodies once; see DESIGN.md). "
+           "`useful` = MODEL_FLOPS/HLO_FLOPs (remat/redundancy waste); "
+           "`roofline` = (MODEL_FLOPS/peak)/max-term.\n",
+           "| arch | cell | mesh | t_comp | t_mem | t_coll | bound | "
+           "useful | roofline | what moves the bound |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+            f"{rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} | "
+            f"{rf['t_collective_s']:.3g} | {rf['bottleneck']} | "
+            f"{rf['useful_flop_fraction']:.1%} | {rf['roofline_fraction']:.2%} | "
+            f"{_one_sentence_fix(r)} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load_all(d)
+    print(dryrun_section(rows))
+    print()
+    print(roofline_section(rows))
+
+
+if __name__ == "__main__":
+    main()

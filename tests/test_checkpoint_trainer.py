@@ -1,0 +1,153 @@
+"""Fault tolerance: checkpoint roundtrip/GC/atomicity, trainer resume,
+failure recovery, straggler detection, preemption flush."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.tokens import Prefetcher, TokenStream
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v)}, "step": jnp.asarray(0, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    state = _state(3.5)
+    ck.save(7, state, extra={"data_step": 7})
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, extra = ck.restore(7, abstract)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert extra["data_step"] == 7
+
+
+def test_checkpoint_keep_k_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async_and_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=True)
+    ck.save(1, _state(1.0))
+    ck.wait()
+    assert ck.all_steps() == [1]
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _state())
+    bad = {"params": {"w": jax.ShapeDtypeStruct((2, 2), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError):
+        ck.restore(1, bad)
+
+
+def _mk_step(fail_at=None):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if fail_at is not None and calls["n"] == fail_at:
+            raise RuntimeError("injected device failure")
+        w = state["params"]["w"] - 0.1
+        return ({"params": {"w": w}, "step": state["step"] + 1},
+                {"loss_total": jnp.abs(w).mean()})
+
+    return step_fn, calls
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    step_fn, _ = _mk_step()
+    stream = TokenStream(vocab_size=64, batch=2, seq=8)
+    tcfg = TrainerConfig(total_steps=12, ckpt_every=5, ckpt_dir=str(tmp_path),
+                         log_every=100)
+    tr = Trainer(step_fn, _state(1.0), stream, tcfg)
+    out = tr.run()
+    assert out["final_step"] == 12
+    ck = Checkpointer(str(tmp_path))
+    assert ck.latest_step() == 12
+
+
+def test_trainer_resumes_from_checkpoint(tmp_path):
+    stream = TokenStream(vocab_size=64, batch=2, seq=8)
+    step_fn, _ = _mk_step()
+    cfg1 = TrainerConfig(total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+                         log_every=100)
+    Trainer(step_fn, _state(1.0), stream, cfg1).run()
+    # new process: resume and finish
+    step_fn2, calls2 = _mk_step()
+    cfg2 = TrainerConfig(total_steps=10, ckpt_every=3, ckpt_dir=str(tmp_path),
+                         log_every=100)
+    tr2 = Trainer(step_fn2, _state(99.0), stream, cfg2)
+    out = tr2.run()
+    assert out["final_step"] == 10
+    assert calls2["n"] == 4  # only the remaining steps re-ran
+
+
+def test_trainer_recovers_from_injected_failure(tmp_path):
+    stream = TokenStream(vocab_size=64, batch=2, seq=8)
+    step_fn, calls = _mk_step(fail_at=5)
+    cfg = TrainerConfig(total_steps=8, ckpt_every=2, ckpt_dir=str(tmp_path),
+                        max_restarts=2, log_every=100)
+    out = Trainer(step_fn, _state(1.0), stream, cfg).run()
+    assert out["final_step"] == 8
+    assert out["restarts"] == 1
+
+
+def test_trainer_nan_loss_triggers_restart(tmp_path):
+    stream = TokenStream(vocab_size=64, batch=2, seq=8)
+    hits = {"n": 0}
+
+    def step_fn(state, batch):
+        hits["n"] += 1
+        loss = jnp.nan if hits["n"] == 3 else 0.5
+        return ({"params": state["params"], "step": state["step"] + 1},
+                {"loss_total": jnp.asarray(loss)})
+
+    cfg = TrainerConfig(total_steps=5, ckpt_every=2, ckpt_dir=str(tmp_path),
+                        max_restarts=2, log_every=100)
+    out = Trainer(step_fn, _state(), stream, cfg).run()
+    assert out["final_step"] == 5 and out["restarts"] == 1
+
+
+def test_preemption_flushes_checkpoint(tmp_path):
+    stream = TokenStream(vocab_size=64, batch=2, seq=8)
+    step_fn, _ = _mk_step()
+    cfg = TrainerConfig(total_steps=1000, ckpt_every=500, ckpt_dir=str(tmp_path),
+                        log_every=10_000)
+    tr = Trainer(step_fn, _state(1.0), stream, cfg)
+
+    orig = tr.step_fn
+
+    def step_then_preempt(state, batch):
+        if tr.step == 4:
+            tr._preempted = True  # what the SIGTERM handler sets
+        return orig(state, batch)
+
+    tr.step_fn = step_then_preempt
+    out = tr.run()
+    assert out["final_step"] == 5
+    assert Checkpointer(str(tmp_path)).latest_step() == 5
+
+
+def test_prefetcher_matches_direct_stream():
+    stream = TokenStream(vocab_size=100, batch=4, seq=16, seed=3)
+    pf = Prefetcher(stream, start_step=0, depth=2)
+    try:
+        for want_step in range(3):
+            step, batch = next(pf)
+            assert step == want_step
+            direct = stream.batch_at(step)
+            np.testing.assert_array_equal(batch["tokens"], direct["tokens"])
+    finally:
+        pf.close()

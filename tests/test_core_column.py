@@ -1,0 +1,162 @@
+"""Core TNN semantics: temporal coding, column forward, WTA, STDP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ColumnConfig, STDPConfig, WaveSpec,
+    body_potential, column_forward, column_forward_matmul, column_step,
+    crossing_time, decode_time, encode_intensity, init_weights, stdp_update,
+    wta_inhibit,
+)
+from repro.core.stdp import default_stabilize_table, stdp_cases
+
+from proptest import cases, ints
+
+SPEC = WaveSpec()
+
+
+def test_encode_decode_roundtrip():
+    v = jnp.linspace(0, 1, 9)
+    t = encode_intensity(v, SPEC)
+    assert t.dtype == jnp.int8
+    assert int(t[-1]) == 0 and int(t[0]) == SPEC.T  # strong->early, zero->none
+    v2 = decode_time(t, SPEC)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v), atol=1 / SPEC.T)
+
+
+def test_body_potential_handcomputed():
+    # one neuron, two synapses: x=[0,2], w=[3,1], T=8
+    x = jnp.asarray([[0, 2]], jnp.int8)
+    w = jnp.asarray([[3], [1]], jnp.int8)
+    V = body_potential(x, w, SPEC)[0, :, 0]
+    #   t:      0  1  2  3  4  5  6  7
+    # syn0:     0  1  2  3  3  3  3  3   (ramps from t=1, saturates at 3)
+    # syn1:     0  0  0  1  1  1  1  1   (spike at 2 -> ramps at 3, cap 1)
+    np.testing.assert_array_equal(np.asarray(V), [0, 1, 2, 4, 4, 4, 4, 4])
+    z = crossing_time(body_potential(x, w, SPEC), 4, SPEC)
+    assert int(z[0, 0]) == 3
+    z = crossing_time(body_potential(x, w, SPEC), 5, SPEC)
+    assert int(z[0, 0]) == SPEC.T  # never crosses
+
+
+@cases(n=15, p=ints(1, 80), q=ints(1, 20), B=ints(1, 9), theta=ints(1, 60))
+def test_matmul_form_equals_direct(p, q, B, theta):
+    kx, kw = jax.random.split(jax.random.PRNGKey(p * 1000 + q))
+    x = jax.random.randint(kx, (B, p), 0, SPEC.T + 1, dtype=jnp.int8)
+    w = jax.random.randint(kw, (p, q), 0, SPEC.w_max + 1, dtype=jnp.int8)
+    z1 = column_forward(x, w, theta, SPEC)
+    z2 = column_forward_matmul(x, w, theta, SPEC)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+def test_earlier_input_never_delays_output():
+    # monotonicity: advancing an input spike can only advance (or keep) z
+    key = jax.random.PRNGKey(3)
+    x = jax.random.randint(key, (1, 12), 0, 9, dtype=jnp.int8)
+    w = init_weights(jax.random.PRNGKey(4), 12, 3, SPEC)
+    z0 = column_forward(x, w, 10, SPEC)
+    x_adv = jnp.maximum(x - 2, 0)
+    z1 = column_forward(x_adv, w, 10, SPEC)
+    assert (np.asarray(z1) <= np.asarray(z0)).all()
+
+
+def test_wta_semantics():
+    z = jnp.asarray([[3, 1, 1, 8], [8, 8, 8, 8], [5, 5, 5, 5]], jnp.int8)
+    out = np.asarray(wta_inhibit(z, SPEC))
+    # row 0: neuron 1 wins tie at t=1 (lowest index), others nulled
+    np.testing.assert_array_equal(out[0], [8, 1, 8, 8])
+    # row 1: nobody spiked
+    np.testing.assert_array_equal(out[1], [8, 8, 8, 8])
+    # row 2: four-way tie -> index 0
+    np.testing.assert_array_equal(out[2], [5, 8, 8, 8])
+
+
+def test_stdp_cases_truth_table():
+    T = SPEC.T
+    x = jnp.asarray([[2, 5, T, T]], jnp.int8)
+    z = jnp.asarray([[4, 4, 4, T]], jnp.int8)[:, :1]  # single neuron, z=4
+    cap, back, sea = stdp_cases(x, jnp.asarray([[4]]), T)
+    cap, back, sea = np.asarray(cap)[0, :, 0], np.asarray(back)[0, :, 0], np.asarray(sea)[0, :, 0]
+    assert cap.tolist() == [True, False, False, False]  # x=2 <= z=4
+    assert back.tolist() == [False, True, True, True]  # x=5 > z; no-x cases
+    # search needs z silent:
+    _, _, sea2 = stdp_cases(x, jnp.asarray([[T]]), T)
+    assert np.asarray(sea2)[0, :, 0].tolist() == [True, True, False, False]
+
+
+def test_stdp_bounds_and_determinism():
+    cfg = ColumnConfig(p=24, q=6, theta=20)
+    w = init_weights(jax.random.PRNGKey(0), 24, 6, SPEC)
+    x = jax.random.randint(jax.random.PRNGKey(1), (16, 24), 0, 9, dtype=jnp.int8)
+    z1, w1 = column_step(x, w, cfg, jax.random.PRNGKey(7))
+    z2, w2 = column_step(x, w, cfg, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))  # same rng
+    assert int(w1.min()) >= 0 and int(w1.max()) <= SPEC.w_max
+
+
+def test_stdp_capture_strengthens_coactive_synapse():
+    """Drive one synapse pattern repeatedly: its weights must rail high
+    while never-active synapses drift low (bimodal stabilized convergence)."""
+    spec = SPEC
+    p, q = 16, 1
+    w = jnp.full((p, q), 3, jnp.int8)
+    x = jnp.where(jnp.arange(p) < 8, 0, spec.T).astype(jnp.int8)[None, :]
+    cfg = STDPConfig()
+    key = jax.random.PRNGKey(0)
+    for i in range(60):
+        key, k = jax.random.split(key)
+        z = jnp.asarray([[1]], jnp.int8)  # output fires right after inputs
+        w = stdp_update(w, x, z, k, spec, cfg)
+    w = np.asarray(w)
+    assert w[:8].mean() > 5.5, w[:8].ravel()
+    assert w[8:].mean() < 1.5, w[8:].ravel()
+
+
+def test_batch_seq_mode_matches_sum_in_direction():
+    cfgsum = STDPConfig(batch_reduce="sum")
+    cfgseq = STDPConfig(batch_reduce="seq")
+    w = init_weights(jax.random.PRNGKey(2), 10, 4, SPEC)
+    x = jax.random.randint(jax.random.PRNGKey(3), (8, 10), 0, 9, dtype=jnp.int8)
+    z = jax.random.randint(jax.random.PRNGKey(4), (8, 4), 0, 9, dtype=jnp.int8)
+    ws = stdp_update(w, x, z, jax.random.PRNGKey(5), SPEC, cfgsum)
+    wq = stdp_update(w, x, z, jax.random.PRNGKey(5), SPEC, cfgseq)
+    assert ws.shape == wq.shape == (10, 4)
+    assert int(jnp.abs(ws.astype(jnp.int32) - wq.astype(jnp.int32)).max()) <= SPEC.w_max
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ColumnConfig(p=4, q=2, theta=1000).validate()
+    ColumnConfig(p=4, q=2, theta=5).validate()
+
+
+def test_gauss_stdp_mode_moments_and_bounds():
+    """'gauss' batched mode: weights stay in range; the net update direction
+    matches the exact 'sum' mode on a strongly-driven pattern."""
+    cfgg = STDPConfig(batch_reduce="gauss")
+    cfgs = STDPConfig(batch_reduce="sum")
+    w = jnp.full((12, 3), 3, jnp.int8)
+    x = jnp.zeros((32, 12), jnp.int8)  # all inputs fire at t=0
+    z = jnp.ones((32, 3), jnp.int8)  # outputs at t=1 -> pure capture
+    wg = stdp_update(w, x, z, jax.random.PRNGKey(0), SPEC, cfgg)
+    ws = stdp_update(w, x, z, jax.random.PRNGKey(0), SPEC, cfgs)
+    assert int(wg.min()) >= 0 and int(wg.max()) <= SPEC.w_max
+    assert (np.asarray(wg) > 3).mean() > 0.9  # capture drives up
+    assert (np.asarray(ws) > 3).mean() > 0.9
+
+
+def test_layer_matmul_impl_equals_direct():
+    import dataclasses
+    from repro.core import LayerConfig, init_layer, layer_forward
+    base = ColumnConfig(p=20, q=6, theta=12)
+    for impl in ("direct", "matmul"):
+        cfg = LayerConfig(5, dataclasses.replace(base, impl=impl))
+        w = init_layer(jax.random.PRNGKey(0), cfg)
+        x = jax.random.randint(jax.random.PRNGKey(1), (4, 5, 20), 0, 9, jnp.int8)
+        out = layer_forward(x, w, cfg)
+        if impl == "direct":
+            ref_out = out
+        else:
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))

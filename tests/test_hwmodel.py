@@ -1,0 +1,76 @@
+"""PPA hardware model vs the paper's published tables."""
+import math
+
+import pytest
+
+from repro.core import hwmodel as HW
+from repro.core import macros as MC
+
+
+def test_table1_power_area_exact():
+    for row in HW.table1_report():
+        assert row["power_uw_model"] == pytest.approx(row["power_uw_paper"], rel=1e-6)
+        assert row["area_mm2_model"] == pytest.approx(row["area_mm2_paper"], rel=1e-6)
+
+
+def test_table1_delay_within_2pct():
+    for row in HW.table1_report():
+        assert row["time_ns_model"] == pytest.approx(row["time_ns_paper"], rel=0.02)
+
+
+def test_table2_prototype():
+    for row in HW.table2_report():
+        assert row["power_mw_model"] == pytest.approx(row["power_mw_paper"], rel=1e-6)
+        assert row["area_mm2_model"] == pytest.approx(row["area_mm2_paper"], rel=1e-6)
+        assert row["time_ns_model"] == pytest.approx(row["time_ns_paper"], rel=0.05)
+        assert row["edp_model"] == pytest.approx(row["edp_paper"], rel=0.10)
+
+
+def test_paper_headline_ratios():
+    r = HW.improvement_report()
+    # paper: ~45% less power, ~35% less area, ~20% faster, ~55% EDP cut
+    assert 0.30 <= r["power_reduction_mean"] <= 0.50
+    assert 0.25 <= r["area_reduction_mean"] <= 0.40
+    assert 0.15 <= r["time_reduction_mean"] <= 0.25
+    assert 0.45 <= r["prototype_edp_reduction_model"] <= 0.65
+
+
+def test_prototype_complexity_claims():
+    t_std = HW.network_transistors(HW.PROTOTYPE_LAYERS, "standard")
+    g_std = HW.network_gates(HW.PROTOTYPE_LAYERS, "standard")
+    # Fig. 19 caption: ~32M gates / ~128M transistors
+    assert abs(t_std - HW.PAPER_PROTOTYPE_TRANSISTORS) / HW.PAPER_PROTOTYPE_TRANSISTORS < 0.15
+    assert abs(g_std - HW.PAPER_PROTOTYPE_GATES) / HW.PAPER_PROTOTYPE_GATES < 0.15
+    # custom macros reduce transistors (GDI: mux 12T -> 2T etc.)
+    t_cus = HW.network_transistors(HW.PROTOTYPE_LAYERS, "custom")
+    assert t_cus < t_std
+
+
+def test_45nm_comparison_two_orders():
+    # paper: ~2 orders of magnitude power improvement vs 45nm for 1024x16
+    col7 = HW.column_ppa(1024, 16, "custom")
+    assert HW.PAPER_45NM_1024x16["power_mW"] * 1e3 / col7.power_uw > 80
+    assert HW.PAPER_45NM_1024x16["area_mm2"] / col7.area_mm2 > 15
+
+
+def test_column_ppa_monotone_in_size():
+    small = HW.column_ppa(64, 8, "custom")
+    big = HW.column_ppa(1024, 16, "custom")
+    assert big.power_uw > small.power_uw
+    assert big.area_um2 > small.area_um2
+    assert big.time_ns > small.time_ns
+
+
+def test_macro_inventory():
+    assert len(MC.MACROS) == 11  # the paper's 11 macros
+    m = MC.MACRO_BY_NAME["mux2to1gdi"]
+    assert m.t_custom == 2 and m.t_std == 12  # stated explicitly in the paper
+    assert MC.column_transistors(64, 8, "custom") < MC.column_transistors(64, 8, "standard")
+    with pytest.raises(ValueError):
+        MC.column_transistors(64, 8, "bogus")
+
+
+def test_edp_convention_matches_paper():
+    # Table II standard: 2.54 mW, 24.14 ns -> 1.48 nJ-ns
+    edp = 2.54 * 24.14 * 24.14 * 1e-3
+    assert edp == pytest.approx(1.48, rel=0.01)

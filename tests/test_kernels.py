@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles — exact integer equality across
+shape/dtype sweeps (interpret mode on CPU; Mosaic on real TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stdp import default_stabilize_table
+from repro.kernels import ops, ref
+
+from proptest import cases, ints, one_of
+
+T = 8
+TABLE = default_stabilize_table(7)
+
+
+def _data(B, p, q, seed, dtype=jnp.int8):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (B, p), 0, T + 1, dtype=dtype)
+    w = jax.random.randint(kw, (p, q), 0, 8, dtype=dtype)
+    return x, w
+
+
+@pytest.mark.parametrize("B,p,q,theta", [
+    (4, 16, 5, 12), (7, 100, 12, 40), (64, 1024, 16, 600),
+    (3, 32, 12, 24), (1, 8, 1, 4), (16, 12, 10, 8),
+])
+def test_column_forward_matches_oracle(B, p, q, theta):
+    x, w = _data(B, p, q, B * p + q)
+    np.testing.assert_array_equal(
+        np.asarray(ops.column_forward(x, w, theta=theta)),
+        np.asarray(ref.column_forward_ref(x, w, theta, T)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16, jnp.int32])
+def test_column_forward_dtypes(dtype):
+    x, w = _data(8, 64, 8, 1, dtype)
+    np.testing.assert_array_equal(
+        np.asarray(ops.column_forward(x, w, theta=30)),
+        np.asarray(ref.column_forward_ref(x, w, 30, T)))
+
+
+@cases(n=15, B=ints(1, 33), p=ints(1, 200), q=ints(1, 16), theta=ints(1, 100))
+def test_column_forward_property_sweep(B, p, q, theta):
+    x, w = _data(B, p, q, B + p + q)
+    np.testing.assert_array_equal(
+        np.asarray(ops.column_forward(x, w, theta=theta)),
+        np.asarray(ref.column_forward_ref(x, w, theta, T)))
+
+
+def test_fused_wta_matches_two_stage():
+    x, w = _data(10, 48, 9, 5)
+    z = ops.column_forward(x, w, theta=20)
+    fused = ops.column_forward(x, w, theta=20, wta=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref.wta_ref(z, T)))
+
+
+@cases(n=10, B=ints(1, 50), q=ints(1, 32))
+def test_wta_kernel_property(B, q):
+    z = jax.random.randint(jax.random.PRNGKey(B * q), (B, q), 0, T + 1, jnp.int32)
+    out = np.asarray(ops.wta(z))
+    np.testing.assert_array_equal(out, np.asarray(ref.wta_ref(z, T)))
+    assert ((out < T).sum(axis=1) <= 1).all()  # at most one survivor
+
+
+@pytest.mark.parametrize("B,p,q", [(4, 16, 5), (9, 130, 12), (32, 256, 16)])
+def test_stdp_kernel_matches_oracle(B, p, q):
+    x, w = _data(B, p, q, 11)
+    z = jax.random.randint(jax.random.PRNGKey(12), (B, q), 0, T + 1, jnp.int8)
+    uu = jax.random.uniform(jax.random.PRNGKey(13), (B, p, q))
+    ud = jax.random.uniform(jax.random.PRNGKey(14), (B, p, q))
+    got = ops.stdp_update(w, x, z, uu, ud, table=TABLE)
+    want = ref.stdp_ref(w, x, z, uu, ud, jnp.asarray(TABLE),
+                        10 / 16, 6 / 16, 2 / 16, 7, T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stdp_kernel_extreme_probs():
+    x, w = _data(6, 32, 4, 21)
+    z = jax.random.randint(jax.random.PRNGKey(22), (6, 4), 0, T + 1, jnp.int8)
+    ones = jnp.ones((6, 32, 4))
+    zeros = jnp.zeros((6, 32, 4))
+    # u=1 -> no update ever
+    got = ops.stdp_update(w, x, z, ones, ones, table=TABLE)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w, dtype=np.int32))
+    # u=0 -> every eligible case fires; weights stay in range
+    got = np.asarray(ops.stdp_update(w, x, z, zeros, zeros, table=TABLE))
+    assert got.min() >= 0 and got.max() <= 7
+
+
+def test_layer_fused_forward_matches_core():
+    from repro.core import ColumnConfig, LayerConfig, WaveSpec, init_layer, layer_forward
+    cfg = LayerConfig(7, ColumnConfig(p=20, q=6, theta=12, wave=WaveSpec()))
+    w = init_layer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), (5, 7, 20), 0, T + 1, jnp.int8)
+    core_out = layer_forward(x, w, cfg)
+    kern_out = ops.layer_forward_fused(x, w, theta=12)
+    np.testing.assert_array_equal(np.asarray(kern_out), np.asarray(core_out, np.int32))

@@ -1,0 +1,83 @@
+"""End-to-end behaviour: the paper's 2-layer TNN prototype learns
+unsupervised class structure on MNIST-like digits, and the hardware model
+prices the exact network that ran."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    build_centroids, build_vote_table, classify, classify_centroid,
+    encode_images, hwmodel, init_network, network_forward,
+    network_train_wave, prototype_config,
+)
+from repro.core.stdp import STDPConfig
+from repro.data.mnist_like import digits
+
+
+def _reduced_proto(sites=625):
+    # full 28x28 field -> 625 sites, exactly the paper's layer geometry
+    return prototype_config(stdp=STDPConfig(), sites=sites, theta1=12, theta2=3)
+
+
+def test_tnn_prototype_unsupervised_learning_and_readout():
+    cfg = _reduced_proto()
+    cfg.validate()
+    assert cfg.n_neurons == 13_750 and cfg.n_synapses == 315_000  # Fig. 19
+
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    imgs, labs = digits(384, seed=1)
+    x = encode_images(jnp.asarray(imgs), cfg)
+    assert x.shape == (384, 625, 32)
+
+    # unsupervised STDP waves (small batches: per-wave competition)
+    key = jax.random.PRNGKey(1)
+    train = jax.jit(lambda xb, ps, k: network_train_wave(xb, ps, cfg, k))
+    for i in range(100):
+        key, k = jax.random.split(key)
+        o = (i * 16) % 368
+        _, params = train(x[o:o + 16], params, k)
+
+    # label neurons on train data, then classify held-out digits
+    outs = network_forward(x, params, cfg)
+    T = cfg.layers[-1].column.wave.T
+    vt = build_vote_table(outs[-1], jnp.asarray(labs), 10, T)
+    cents = build_centroids(outs[-1], jnp.asarray(labs), 10, T)
+    imgs2, labs2 = digits(128, seed=2)
+    outs2 = network_forward(encode_images(jnp.asarray(imgs2), cfg), params, cfg)
+    acc_vote = float((np.asarray(classify(outs2[-1], vt, T)) == labs2).mean())
+    acc_cent = float((np.asarray(classify_centroid(outs2[-1], cents, T)) == labs2).mean())
+    # 10 classes, chance = 0.1. The centroid readout is the stable measure
+    # of class information in the spike code (62-70%); the paper-style vote
+    # is higher-variance on synthetic digits (13-27% across data sizes) —
+    # readout comparison documented in EXPERIMENTS.md §TNN.
+    assert acc_cent > 0.5, f"centroid accuracy {acc_cent:.2f}"
+    assert acc_vote >= 0.08, f"soft-vote accuracy {acc_vote:.2f} below sanity"
+    assert set(np.unique(np.asarray(classify(outs2[-1], vt, T)))) <= set(range(10))
+
+
+def test_stdp_weights_go_bimodal():
+    cfg = _reduced_proto(sites=25)
+    # 25-site reduced field: 8x8 crops -> (8-4+1)^2 = 25 patch sites
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    imgs, _ = digits(128, seed=3)
+    x = encode_images(jnp.asarray(imgs[:, 10:18, 10:18]), cfg)
+    key = jax.random.PRNGKey(1)
+    w0 = np.asarray(params[0]).astype(np.int32)
+    train = jax.jit(lambda xb, ps, k: network_train_wave(xb, ps, cfg, k))
+    for _ in range(12):
+        key, k = jax.random.split(key)
+        _, params = train(x, params, k)
+    w = np.asarray(params[0]).astype(np.int32)
+    rails0 = ((w0 <= 1) | (w0 >= 6)).mean()
+    rails = ((w <= 1) | (w >= 6)).mean()
+    assert rails > rails0 + 0.15, (rails0, rails)  # stabilized -> bimodal
+
+
+def test_hwmodel_prices_the_running_network():
+    cfg = _reduced_proto()
+    layers = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
+    ppa = hwmodel.network_ppa(layers, "custom")
+    # Table II custom: 1.69 mW / 1.56 mm2 / ~19 ns
+    assert abs(ppa.power_mw - 1.69) / 1.69 < 0.01
+    assert abs(ppa.area_mm2 - 1.56) / 1.56 < 0.01
+    assert abs(ppa.time_ns - 19.15) / 19.15 < 0.05
