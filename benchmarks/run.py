@@ -110,21 +110,45 @@ def column_throughput() -> None:
 
 
 def tnn_wave_throughput() -> None:
+    """Reference vs fused-Pallas per-gamma-wave timing for the prototype.
+
+    ``TNN_BENCH_SITES`` (perfect square, default 625 = the paper's full
+    geometry) shrinks the field for quick CPU runs — on CPU the Pallas path
+    runs in interpret mode, so the fused numbers are a correctness/overhead
+    check there; Mosaic-on-TPU is the performance target (DESIGN.md §6).
+    """
     import jax
     import jax.numpy as jnp
-    from repro.core import encode_images, init_network, network_train_wave, prototype_config
+    from repro.configs.tnn_mnist import image_side
+    from repro.core import (
+        encode_images, init_network, network_train_wave, prototype_config,
+        with_impl,
+    )
 
-    print("\n== full prototype learning wave (625+625 columns, batched) ==")
-    cfg = prototype_config(sites=625, theta1=20, theta2=6)
+    sites = int(os.environ.get("TNN_BENCH_SITES", "625"))
+    side = image_side(sites)
+    B = 32
+    print(f"\n== prototype learning wave ({sites}+{sites} columns, batch {B}, "
+          f"reference vs pallas) ==")
+    cfg = prototype_config(sites=sites, theta1=20, theta2=6)
     params = init_network(jax.random.PRNGKey(0), cfg)
-    imgs = jnp.asarray(np.random.default_rng(0).random((32, 28, 28)), jnp.float32)
+    imgs = jnp.asarray(np.random.default_rng(0).random((B, side, side)),
+                       jnp.float32)
     x = encode_images(imgs, cfg)
-    step = jax.jit(lambda xb, ps, k: network_train_wave(xb, ps, cfg, k))
     k = jax.random.PRNGKey(1)
-    us = _timeit(lambda: jax.block_until_ready(step(x, params, k)[1][0]), n=2)
-    print(f"train wave: {us/1e3:.1f} ms/batch(32) = {us/32:.0f} us/image "
+    us_by_impl = {}
+    for impl in ("direct", "pallas"):
+        icfg = with_impl(cfg, impl)
+        step = jax.jit(lambda xb, ps, kk: network_train_wave(xb, ps, icfg, kk))
+        us = _timeit(lambda: jax.block_until_ready(step(x, params, k)[1][0]), n=2)
+        us_by_impl[impl] = us
+        print(f"{impl:9s} train wave: {us/1e3:9.1f} ms/batch({B}) = "
+              f"{us/B:8.0f} us/image")
+        _emit(f"tnn_prototype_wave_{impl}", us, f"us_per_image={us/B:.1f}")
+    ratio = us_by_impl["direct"] / max(us_by_impl["pallas"], 1e-9)
+    print(f"pallas/reference speedup: {ratio:.2f}x on {jax.default_backend()} "
           f"(silicon target: 19.15 ns/image @ 1.69 mW)")
-    _emit("tnn_prototype_wave", us, f"us_per_image={us/32:.1f}")
+    _emit("tnn_prototype_wave_speedup", 0.0, f"x={ratio:.3f}")
 
 
 def lm_step_micro() -> None:

@@ -4,6 +4,11 @@ trained with unsupervised STDP on MNIST-like digits, then read out with a
 vote table — and priced by the calibrated 7nm PPA model (Tables I/II).
 
     PYTHONPATH=src python examples/tnn_mnist.py --train 512 --waves 8
+
+``--impl`` selects the execution backend for the whole network: the
+reference formulations ("direct"/"matmul") or the fused Pallas kernels
+("pallas" — Mosaic on TPU, interpret fallback on CPU). All backends are
+bit-exact; see README.md's backend matrix.
 """
 import argparse
 import time
@@ -15,7 +20,7 @@ import numpy as np
 from repro.core import (
     build_centroids, build_vote_table, classify, classify_centroid,
     encode_images, hwmodel, init_network, network_forward,
-    network_train_wave, prototype_config,
+    network_train_wave, prototype_config, with_impl,
 )
 from repro.data.mnist_like import digits
 
@@ -28,10 +33,15 @@ def main():
     ap.add_argument("--wave-batch", type=int, default=16)
     ap.add_argument("--theta1", type=int, default=12)
     ap.add_argument("--theta2", type=int, default=3)
+    ap.add_argument("--impl", default="direct",
+                    choices=("direct", "matmul", "pallas"),
+                    help="execution backend (pallas = fused kernels)")
     args = ap.parse_args()
 
-    cfg = prototype_config(theta1=args.theta1, theta2=args.theta2)
-    print(f"prototype: {cfg.n_neurons:,} neurons, {cfg.n_synapses:,} synapses")
+    cfg = with_impl(prototype_config(theta1=args.theta1, theta2=args.theta2),
+                    args.impl)
+    print(f"prototype: {cfg.n_neurons:,} neurons, {cfg.n_synapses:,} synapses "
+          f"(impl={args.impl})")
     params = init_network(jax.random.PRNGKey(0), cfg)
 
     imgs, labs = digits(args.train, seed=1)
@@ -46,6 +56,9 @@ def main():
         _, params = train(x[o:o + bs], params, k)
         if (i + 1) % 10 == 0:
             print(f"wave {i+1}/{args.waves} done ({time.time()-t0:.1f}s)")
+    jax.block_until_ready(params)
+    print(f"training: {1e3 * (time.time() - t0) / args.waves:.0f} ms/gamma-wave "
+          f"(impl={args.impl})")
 
     T = cfg.layers[-1].column.wave.T
     outs = network_forward(x, params, cfg)

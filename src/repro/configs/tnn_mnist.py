@@ -1,18 +1,59 @@
 """tnn-mnist — the PAPER'S OWN architecture (Fig. 19): the 2-layer TNN
 prototype, 625 columns of 32x12 -> 625 columns of 12x10 (13,750 neurons,
-315,000 synapses). This is the config the custom 7nm macros implement."""
-from repro.core.network import prototype_config
+315,000 synapses). This is the config the custom 7nm macros implement.
+
+``network_config(impl=...)`` selects the execution backend for the whole
+stack: "direct"/"matmul" are the reference vmap formulations, "pallas"
+routes every layer through the fused kernels in ``repro.kernels`` (the
+production path; see DESIGN.md §2 and the backend matrix in README.md).
+
+Reduced ``sites`` (smoke tests / CPU serving) must be a perfect square
+S = s*s; the matching input field is then (s+3, s+3) pixels, since a k=4
+stride-1 patch grid over an (s+3)^2 image yields exactly s*s sites.
+"""
+import dataclasses
+import math
+
+from repro.core.network import prototype_config, with_impl
 from repro.core.stdp import STDPConfig
 from repro.core.temporal import WaveSpec
 
 WAVE = WaveSpec(time_bits=3, weight_bits=3)
 STDP = STDPConfig()
+PATCH_K = 4
 
 
-def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8):
-    return prototype_config(
+def image_side(sites: int, patch_k: int = PATCH_K) -> int:
+    """Input field side length for a square grid of ``sites`` patch sites."""
+    s = math.isqrt(sites)
+    if s * s != sites:
+        raise ValueError(f"sites={sites} is not a perfect square")
+    return s + patch_k - 1
+
+
+def crop_field(images, sites: int):
+    """Centered crop of (B, H, W) images to the field a ``sites`` grid needs.
+
+    Identity for the full 625-site / 28x28 geometry; raises if the images
+    are smaller than the requested field.
+    """
+    side = image_side(sites)
+    B, H, W = images.shape
+    if side > H or side > W:
+        raise ValueError(
+            f"sites={sites} needs a {side}x{side} field but images are {H}x{W}")
+    r0, c0 = (H - side) // 2, (W - side) // 2
+    return images[:, r0:r0 + side, c0:c0 + side]
+
+
+def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8,
+                   impl: str = "direct"):
+    side = image_side(sites)
+    cfg = prototype_config(
         wave=WAVE, stdp=STDP, sites=sites, theta1=theta1, theta2=theta2
     )
+    cfg = dataclasses.replace(cfg, image_hw=(side, side))
+    return with_impl(cfg, impl)
 
 
 CONFIG = network_config()

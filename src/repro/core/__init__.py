@@ -25,6 +25,7 @@ from repro.core.network import (
     classify,
     build_centroids,
     classify_centroid,
+    with_impl,
 )
 from repro.core import hwmodel, macros
 
@@ -35,6 +36,6 @@ __all__ = [
     "column_step", "crossing_time", "init_weights", "wta_inhibit",
     "LayerConfig", "init_layer", "layer_forward", "layer_step",
     "NetworkConfig", "prototype_config", "init_network", "encode_images",
-    "network_forward", "network_train_wave", "build_vote_table", "classify", "build_centroids", "classify_centroid",
+    "network_forward", "network_train_wave", "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",
     "hwmodel", "macros",
 ]

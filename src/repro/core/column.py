@@ -44,13 +44,20 @@ class ColumnConfig:
     theta: int  # body-potential threshold
     wave: WaveSpec = WaveSpec()
     stdp: STDPConfig = STDPConfig()
-    # forward implementation: "direct" broadcast evaluation, or "matmul" —
-    # the MXU-native (i,k)-factorized form (§Perf TNN iteration; both are
-    # exactly equal, see tests)
+    # Execution backend for the column/layer hot path (all three are exactly
+    # equal — parity asserted in tests):
+    #   "direct" — reference broadcast evaluation of the body potential
+    #   "matmul" — MXU-native (i,k)-factorized einsum (DESIGN.md §2)
+    #   "pallas" — the fused Pallas kernels in repro.kernels (forward+WTA and
+    #              STDP in single launches; Mosaic on TPU, interpret on CPU)
     impl: str = "direct"
+
+    IMPLS = ("direct", "matmul", "pallas")
 
     def validate(self) -> None:
         self.wave.validate()
+        if self.impl not in self.IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; one of {self.IMPLS}")
         if self.p < 1 or self.q < 1:
             raise ValueError(f"bad column shape p={self.p} q={self.q}")
         if not (1 <= self.theta <= self.p * self.wave.w_max):

@@ -4,6 +4,11 @@ A layer holds ``n_cols`` columns of identical (p, q) shape; weights are a
 single ``(n_cols, p, q)`` int8 array and every column runs the same pure
 ``column_step`` — the silicon's spatial replication becomes ``vmap``.
 
+Execution backend is selected by ``ColumnConfig.impl``: the two reference
+formulations ("direct"/"matmul") vmap per-column jnp code, while "pallas"
+routes the whole layer through the fused kernels in :mod:`repro.kernels`
+(one padded launch per layer, bit-exact with the reference — DESIGN.md §2).
+
 Also provides the receptive-field plumbing for the MNIST prototype: 4x4
 pixel patches x {on, off} polarity = 32 synapses per column, 25x25 = 625
 sites over a 28x28 field (Fig. 19).
@@ -21,6 +26,7 @@ from repro.core.column import (
 )
 from repro.core.stdp import stdp_update
 from repro.core.temporal import WaveSpec
+from repro.kernels import ops as _kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +56,10 @@ def init_layer(rng: jax.Array, cfg: LayerConfig) -> jax.Array:
 def layer_forward(x: jax.Array, w: jax.Array, cfg: LayerConfig) -> jax.Array:
     """x: (B, n_cols, p) -> post-WTA spike times (B, n_cols, q)."""
     spec = cfg.column.wave
-    fwd = (column_forward_matmul if getattr(cfg.column, "impl", "direct") == "matmul"
-           else column_forward)
+    if cfg.column.impl == "pallas":
+        z = _kops.layer_forward_fused(x, w, theta=cfg.column.theta, T=spec.T)
+        return z.astype(jnp.int8)
+    fwd = column_forward_matmul if cfg.column.impl == "matmul" else column_forward
 
     def one_col(xc, wc):
         return wta_inhibit(fwd(xc, wc, cfg.column.theta, spec), spec)
@@ -74,6 +82,25 @@ def layer_step(
             raise ValueError("learning requires rng")
         keys = jax.random.split(rng, cfg.n_cols)
         spec, stdp = cfg.column.wave, cfg.column.stdp
+        if cfg.column.impl == "pallas" and stdp.batch_reduce == "sum":
+            # Fused layer-level STDP. The uniforms are drawn per column from
+            # the SAME per-column key split and with the SAME (2, B, p, q)
+            # shape as the reference stdp_update, so the Bernoulli compares
+            # see identical bits -> the update is bit-exact with the vmap
+            # path ("seq"/"gauss" reduce modes keep the reference path; the
+            # fused kernel implements the batched-sum counters).
+            B = x.shape[0]
+            u = jax.vmap(
+                lambda k: jax.random.uniform(
+                    k, (2, B, cfg.column.p, cfg.column.q), dtype=jnp.float32)
+            )(keys)  # (n_cols, 2, B, p, q)
+            w = _kops.layer_stdp_fused(
+                w, x, z, u[:, 0], u[:, 1],
+                T=spec.T, w_max=spec.w_max, table=stdp.table_tuple(spec),
+                mu_capture=stdp.mu_capture, mu_backoff=stdp.mu_backoff,
+                mu_search=stdp.mu_search,
+            ).astype(jnp.int8)
+            return z, w
         w = jax.vmap(
             lambda wc, xc, zc, k: stdp_update(wc, xc, zc, k, spec, stdp),
             in_axes=(0, 1, 1, 0),

@@ -59,6 +59,23 @@ def prototype_config(
     return NetworkConfig(layers=(l1, l2))
 
 
+def with_impl(cfg: NetworkConfig, impl: str) -> NetworkConfig:
+    """Rebind every layer's execution backend ("direct"/"matmul"/"pallas").
+
+    Params and semantics are backend-invariant, so the same weights can be
+    trained on one backend and served on another; this is the single switch
+    examples/benchmarks/serving flip to route the whole network through
+    ``repro.kernels.ops``.
+    """
+    layers = tuple(
+        dataclasses.replace(l, column=dataclasses.replace(l.column, impl=impl))
+        for l in cfg.layers
+    )
+    out = dataclasses.replace(cfg, layers=layers)
+    out.validate()
+    return out
+
+
 def init_network(rng: jax.Array, cfg: NetworkConfig) -> List[jax.Array]:
     keys = jax.random.split(rng, len(cfg.layers))
     return [init_layer(k, l) for k, l in zip(keys, cfg.layers)]

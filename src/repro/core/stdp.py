@@ -64,13 +64,18 @@ class STDPConfig:
     # "seq": exact silicon semantics, one image per wave via lax.scan.
     batch_reduce: str = "sum"
 
-    def table(self, spec: WaveSpec) -> jnp.ndarray:
+    def table_tuple(self, spec: WaveSpec) -> Tuple[float, ...]:
+        """The BRV table as a static python tuple (the form the Pallas kernel
+        takes as a compile-time constant)."""
         tab = self.stabilize or default_stabilize_table(spec.w_max)
         if len(tab) != spec.w_max + 1:
             raise ValueError(
                 f"stabilize table has {len(tab)} entries, need {spec.w_max + 1}"
             )
-        return jnp.asarray(tab, dtype=jnp.float32)
+        return tuple(float(v) for v in tab)
+
+    def table(self, spec: WaveSpec) -> jnp.ndarray:
+        return jnp.asarray(self.table_tuple(spec), dtype=jnp.float32)
 
 
 def stdp_cases(x: jax.Array, z: jax.Array, T: int):

@@ -1,8 +1,20 @@
 # Pallas TPU kernels for the paper's compute hot spots (the column datapath
 # the custom macros implement in silicon): fused RNL-accumulate+threshold
 # forward, WTA inhibition, and the fused STDP update. ops.py wraps them with
-# padding + CPU interpret fallback; ref.py holds the pure-jnp oracles.
+# padding + CPU interpret fallback; ref.py holds the pure-jnp oracles. The
+# layer-level entry points (layer_forward_fused / layer_stdp_fused) are the
+# production path selected by ColumnConfig(impl="pallas").
 from repro.kernels import ops, ref
-from repro.kernels.ops import column_forward, layer_forward_fused, stdp_update, wta
+from repro.kernels.ops import (
+    column_forward,
+    layer_forward_fused,
+    layer_stdp_fused,
+    stdp_update,
+    wta,
+)
 
-__all__ = ["ops", "ref", "column_forward", "layer_forward_fused", "stdp_update", "wta"]
+__all__ = [
+    "ops", "ref",
+    "column_forward", "layer_forward_fused", "layer_stdp_fused",
+    "stdp_update", "wta",
+]

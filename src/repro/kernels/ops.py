@@ -1,9 +1,51 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels — the production TNN path.
 
-Handles: CPU fallback (interpret=True — the kernels execute their bodies in
-Python/XLA on CPU for validation; on TPU they compile via Mosaic), padding
-to tile multiples (padded synapses are encoded as no-spike/zero-weight so
-they contribute nothing), and layer-level vmapping over columns.
+The raw kernels (:mod:`repro.kernels.tnn_column`, :mod:`repro.kernels.wta`,
+:mod:`repro.kernels.stdp_update`) require tile-aligned shapes; the wrappers
+here make them safe for arbitrary shapes and both execution targets:
+
+* **Padding semantics** (DESIGN.md §6). Batch rows and synapse rows are
+  padded up to block multiples before the kernel launch and sliced away
+  after. Padded entries are encoded so they are algebraic no-ops:
+
+  - padded *input spike times* are set to ``T`` ("no spike"): an RNL ramp
+    that never starts contributes 0 to every body potential, and the STDP
+    case generator classifies an (x=T, z=T) pair as "none" (no update);
+  - padded *weight rows* are set to 0: a zero-weight synapse saturates its
+    ramp at 0, again contributing nothing, and the padded rows of the STDP
+    output are sliced off before anything reads them;
+  - padded *STDP uniforms* are set to 1.0: a Bernoulli draw ``u < p`` with
+    ``u = 1.0`` never fires, so padded batch rows cannot perturb counters.
+
+* **``interpret`` auto-fallback** (DESIGN.md §8). Every wrapper takes
+  ``interpret: bool | None``. ``None`` (the default) resolves to
+  ``jax.default_backend() != "tpu"``: on a real TPU the kernels compile via
+  Mosaic; everywhere else (the CPU-only CI container, laptops) Pallas runs
+  the kernel bodies through its interpreter, which is slow but bit-exact —
+  the same tests and the same call sites work on both targets unchanged.
+
+Layer-level entry points (:func:`layer_forward_fused`,
+:func:`layer_stdp_fused`) pad ONCE for the whole ``(B, n_cols, p)`` layer
+and then ``vmap`` the raw kernel over the column axis, so the pad/slice pair
+does not replicate per column inside the vmapped trace.
+
+Usage — fused forward + learning for one layer (CPU or TPU)::
+
+    import jax, jax.numpy as jnp
+    from repro.core.stdp import default_stabilize_table
+    from repro.kernels import ops
+
+    B, C, p, q, T, theta = 32, 625, 32, 12, 8, 24
+    x = jax.random.randint(jax.random.PRNGKey(0), (B, C, p), 0, T + 1, jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (C, p, q), 0, 8, jnp.int8)
+
+    z = ops.layer_forward_fused(x, w, theta=theta, T=T)        # (B, C, q) i32
+    u = jax.random.uniform(jax.random.PRNGKey(2), (C, 2, B, p, q))
+    w2 = ops.layer_stdp_fused(w, x, z, u[:, 0], u[:, 1], T=T, w_max=7,
+                              table=default_stabilize_table(7))
+
+In the core model the same path is selected declaratively with
+``ColumnConfig(impl="pallas")`` — see :mod:`repro.core.layer`.
 """
 from __future__ import annotations
 
@@ -25,6 +67,19 @@ def _pad_to(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
+def _launch_geom(B: int, p: int, block_b: int, block_p: int,
+                 interpret: bool | None):
+    """One place for the launch prologue every wrapper shares: clamp block
+    sizes to the (8-aligned) problem extents, compute the padded extents,
+    and resolve the interpret auto-fallback (DESIGN.md §6, §8). Returns
+    (block_b, block_p, padded_B, padded_p, interpret)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    block_b = min(block_b, _pad_to(B, 8))
+    block_p = min(block_p, _pad_to(p, 8))
+    return block_b, block_p, _pad_to(B, block_b), _pad_to(p, block_p), interpret
+
+
 def column_forward(
     x: jax.Array,
     w: jax.Array,
@@ -37,13 +92,11 @@ def column_forward(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused column forward (+ optional WTA). x: (B, p), w: (p, q) -> (B, q) i32."""
-    if interpret is None:
-        interpret = not _on_tpu()
     B, p = x.shape
     q = w.shape[1]
-    block_b = min(block_b, _pad_to(B, 8))
-    block_p = min(block_p, _pad_to(p, 8))
-    Bp, pp, qp = _pad_to(B, block_b), _pad_to(p, block_p), q
+    block_b, block_p, Bp, pp, interpret = _launch_geom(
+        B, p, block_b, block_p, interpret)
+    qp = q
     if (Bp, pp) != (B, p):
         x = jnp.pad(x, ((0, Bp - B), (0, pp - p)), constant_values=T)  # no-spike
         w = jnp.pad(w, ((0, pp - p), (0, 0)))  # zero weight -> zero response
@@ -84,13 +137,10 @@ def stdp_update(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused STDP wave update. Returns new (p, q) i32 weights."""
-    if interpret is None:
-        interpret = not _on_tpu()
     B, p = x.shape
     q = z.shape[1]
-    block_p = min(block_p, _pad_to(p, 8))
-    block_b = min(block_b, _pad_to(B, 8))
-    Bp, pp = _pad_to(B, block_b), _pad_to(p, block_p)
+    block_b, block_p, Bp, pp, interpret = _launch_geom(
+        B, p, block_b, block_p, interpret)
     if (Bp, pp) != (B, p):
         # padded batch rows: x=T & z=T -> 'none' case -> no update;
         # padded synapse rows are sliced away.
@@ -109,12 +159,80 @@ def stdp_update(
 
 
 def layer_forward_fused(
-    x: jax.Array, w: jax.Array, *, theta: int, T: int = 8, **kw
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    theta: int,
+    T: int = 8,
+    wta: bool = True,
+    block_b: int = 64,
+    block_p: int = 256,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Whole-layer fused forward+WTA: x (B, C, p), w (C, p, q) -> (B, C, q).
+    """Whole-layer fused forward+WTA: x (B, C, p), w (C, p, q) -> (B, C, q) i32.
 
-    vmap over columns adds a leading grid dimension to the Pallas call —
-    the layer's spatial replication (Fig. 1) in one launch.
+    Pads the batch/synapse axes once for the whole layer (see the module
+    docstring for the no-op encodings), then vmaps the raw Pallas call over
+    the column axis — the layer's spatial replication (Fig. 1) becomes a
+    leading grid dimension of one kernel launch.
     """
-    f = functools.partial(column_forward, theta=theta, T=T, wta=True, **kw)
-    return jax.vmap(f, in_axes=(1, 0), out_axes=1)(x, w)
+    B, C, p = x.shape
+    q = w.shape[2]
+    block_b, block_p, Bp, pp, interpret = _launch_geom(
+        B, p, block_b, block_p, interpret)
+    if (Bp, pp) != (B, p):
+        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, pp - p)), constant_values=T)
+        w = jnp.pad(w, ((0, 0), (0, pp - p), (0, 0)))
+    f = functools.partial(
+        column_forward_pallas, theta=theta, T=T, wta=wta,
+        block_b=block_b, block_p=block_p, interpret=interpret,
+    )
+    z = jax.vmap(f, in_axes=(1, 0), out_axes=1)(x, w)
+    return z[:B]
+
+
+def layer_stdp_fused(
+    w: jax.Array,
+    x: jax.Array,
+    z: jax.Array,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+    *,
+    T: int = 8,
+    w_max: int = 7,
+    table: tuple,
+    mu_capture: float = 10 / 16,
+    mu_backoff: float = 6 / 16,
+    mu_search: float = 2 / 16,
+    block_p: int = 128,
+    block_b: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Whole-layer fused STDP: one wave of learning for every column at once.
+
+    w: (C, p, q) weights; x: (B, C, p) inputs; z: (B, C, q) post-WTA outputs;
+    u_up/u_dn: (C, B, p, q) per-column uniforms (column-major so each column's
+    draws match the reference path's per-column rng split). Returns (C, p, q)
+    i32 weights. Padding happens once at the layer level — padded batch rows
+    carry u=1.0 so they can never win a Bernoulli compare.
+    """
+    B, C, p = x.shape
+    q = w.shape[2]
+    block_b, block_p, Bp, pp, interpret = _launch_geom(
+        B, p, block_b, block_p, interpret)
+    if (Bp, pp) != (B, p):
+        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, pp - p)), constant_values=T)
+        z = jnp.pad(z, ((0, Bp - B), (0, 0), (0, 0)), constant_values=T)
+        w = jnp.pad(w, ((0, 0), (0, pp - p), (0, 0)))
+        u_up = jnp.pad(u_up, ((0, 0), (0, Bp - B), (0, pp - p), (0, 0)),
+                       constant_values=1.0)
+        u_dn = jnp.pad(u_dn, ((0, 0), (0, Bp - B), (0, pp - p), (0, 0)),
+                       constant_values=1.0)
+    f = functools.partial(
+        stdp_update_pallas,
+        T=T, w_max=w_max, table=tuple(table),
+        mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
+        block_p=block_p, block_b=block_b, interpret=interpret,
+    )
+    out = jax.vmap(f, in_axes=(0, 1, 1, 0, 0))(w, x, z, u_up, u_dn)
+    return out[:, :p]

@@ -1,12 +1,19 @@
-"""Production serving launcher — the engine over the host/production mesh.
+"""Production serving launcher — the engines over the host/production mesh.
+
+LM serving (the slot-based continuous-batching engine):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
         --requests 6 --slots 2
+
+TNN-as-a-service (the paper's prototype classified over the fused Pallas
+path, batch axis data-parallel over the mesh):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
+        --requests 32 --slots 8 --sites 64 --impl pallas
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -14,19 +21,11 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.launch.mesh import describe, make_host_mesh
-from repro.models import model as M
-from repro.serve.engine import Engine, Request
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+def serve_lm(args: argparse.Namespace) -> None:
+    from repro.models import model as M
+    from repro.serve.engine import Engine, Request
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh()
@@ -45,6 +44,65 @@ def main() -> None:
     total = sum(len(r.out_tokens) for r in done.values())
     print(f"served {len(done)} requests / {total} tokens "
           f"in {time.time()-t0:.2f}s")
+
+
+def serve_tnn(args: argparse.Namespace) -> None:
+    from repro.configs.tnn_mnist import crop_field, network_config
+    from repro.core import init_network, network_train_wave, encode_images
+    from repro.data.mnist_like import digits
+    from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+    import jax.numpy as jnp
+
+    mesh = make_host_mesh()
+    n_slots = args.slots
+    if n_slots % mesh.shape.get("data", 1):
+        n_slots = mesh.shape["data"] * max(n_slots // mesh.shape["data"], 1)
+    cfg = network_config(sites=args.sites, theta1=12, theta2=3, impl=args.impl)
+    print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
+          f"on {describe(mesh)}")
+    params = init_network(jax.random.PRNGKey(0), cfg)
+
+    imgs, labs = digits(max(128, 4 * n_slots), seed=1)
+    imgs = crop_field(imgs, args.sites)
+    x = jnp.asarray(encode_images(jnp.asarray(imgs), cfg))
+    key = jax.random.PRNGKey(1)
+    for _ in range(args.train_waves):  # short unsupervised warm-up
+        key, k = jax.random.split(key)
+        _, params = network_train_wave(x[:16], params, cfg, k)
+
+    eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl, mesh=mesh)
+    eng.fit(imgs, labs)
+
+    test_imgs, test_labs = digits(args.requests, seed=2)
+    test_imgs = crop_field(test_imgs, args.sites)
+    t0 = time.time()
+    for uid in range(args.requests):
+        eng.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
+    done = eng.run_until_done()
+    dt = time.time() - t0
+    acc = float(np.mean([done[u].result == test_labs[u] for u in done]))
+    print(f"served {len(done)} images in {eng.waves_served} waves / {dt:.2f}s "
+          f"({1e3 * dt / max(len(done), 1):.1f} ms/image), accuracy {acc:.1%}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    # tnn-mnist options
+    ap.add_argument("--sites", type=int, default=64)
+    ap.add_argument("--impl", default="pallas",
+                    choices=("direct", "matmul", "pallas"))
+    ap.add_argument("--train-waves", type=int, default=4)
+    args = ap.parse_args()
+    if args.arch == "tnn-mnist":
+        serve_tnn(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,5 @@
-# serve subpackage
+# Serving engines: the slot-based LM Engine (continuous-batching-lite) and
+# the TNNEngine that serves the paper's prototype over the fused Pallas path.
+from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+
+__all__ = ["ClassifyRequest", "TNNEngine"]

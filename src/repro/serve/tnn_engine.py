@@ -1,0 +1,160 @@
+"""TNN-as-a-service: slot-batched image classification over the fused path.
+
+The LM :class:`repro.serve.engine.Engine` amortizes jit cost by giving every
+request a *slot* in one fixed-shape batched decode step. Classification with
+the TNN prototype is one gamma wave per image, so the same trick collapses
+to its simplest form: ``n_slots`` fixed batch rows, one jitted
+encode→forward→classify call per tick regardless of how many requests are
+queued, idle rows carried as zero images whose outputs are ignored.
+
+The forward runs through the network's configured backend — ``"pallas"`` by
+default, i.e. the fused kernels of :mod:`repro.kernels` — and the batch
+(slot) axis is data-parallel ``shard_map``-sharded over the mesh's "data"
+axis via :mod:`repro.sharding`, so the identical engine serves from one CPU
+device (smoke tests, ``interpret=True``) or a production TPU mesh
+(``launch/serve.py --arch tnn-mnist``). Params and the vote table are
+replicated; only images/results travel on the batch axis.
+
+The readout is the paper's unsupervised labelling: :meth:`TNNEngine.fit`
+runs one labelled pass to build the per-site vote table (DESIGN.md §1), and
+every served request is classified by the soft site vote.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.network import (
+    NetworkConfig,
+    build_vote_table,
+    classify,
+    encode_images,
+    network_forward,
+    with_impl,
+)
+from repro.sharding import shard_map
+
+
+@dataclasses.dataclass
+class ClassifyRequest:
+    uid: int
+    image: np.ndarray  # (H, W) float intensities in [0, 1]
+    result: Optional[int] = None  # class id, filled when served
+
+
+class TNNEngine:
+    """Fixed-slot batched classification engine for the TNN prototype.
+
+    Args:
+        cfg: network config; its backend is overridden by ``impl``.
+        params: per-layer weight list (as from ``init_network`` or training).
+        n_slots: concurrent images per jitted call (the fixed batch shape).
+            Must be a multiple of the mesh's "data" axis size.
+        impl: execution backend for serving ("pallas" routes every layer
+            through repro.kernels.ops; "direct"/"matmul" are the references).
+        mesh: optional ``Mesh`` with a "data" axis for data-parallel
+            sharding of the slot axis; ``None`` serves unsharded.
+    """
+
+    def __init__(
+        self,
+        cfg: NetworkConfig,
+        params: Sequence[jax.Array],
+        n_slots: int = 8,
+        impl: str = "pallas",
+        mesh: Optional[Mesh] = None,
+    ):
+        cfg = with_impl(cfg, impl)
+        cfg.validate()
+        if mesh is not None:
+            ndata = mesh.shape.get("data", 1)
+            if n_slots % max(ndata, 1):
+                raise ValueError(f"n_slots={n_slots} not divisible by "
+                                 f"data axis size {ndata}")
+        self.cfg = cfg
+        self.params = list(params)
+        self.n_slots = n_slots
+        self.mesh = mesh
+        self.vote_table: Optional[jax.Array] = None
+        self.queue: List[ClassifyRequest] = []
+        self.done: Dict[int, ClassifyRequest] = {}
+        self.waves_served = 0
+
+        T = cfg.layers[-1].column.wave.T
+
+        def fwd(ps, imgs):  # (b, H, W) -> (b, S, q) last-layer spike times
+            x = encode_images(imgs, self.cfg)
+            return network_forward(x, ps, self.cfg)[-1]
+
+        if mesh is None:
+            self._forward = jax.jit(fwd)
+        else:
+            self._forward = jax.jit(shard_map(
+                fwd, mesh=mesh,
+                in_specs=(P(), P("data")),
+                out_specs=P("data"),
+            ))
+        self._classify = jax.jit(
+            lambda z, vt: classify(z, vt, T, soft=True))
+
+    # -- readout ----------------------------------------------------------
+
+    def fit(self, images: np.ndarray, labels: np.ndarray) -> None:
+        """Build the vote-table readout from one labelled pass (the paper's
+        neuron-labelling phase; weights are NOT updated — learning stays in
+        the training drivers)."""
+        T = self.cfg.layers[-1].column.wave.T
+        z = self._forward_batched(jnp.asarray(images, jnp.float32))
+        self.vote_table = build_vote_table(
+            z, jnp.asarray(labels), self.cfg.n_classes, T)
+
+    def _forward_batched(self, imgs: jax.Array) -> jax.Array:
+        """Run any number of images through the fixed-slot forward."""
+        n = imgs.shape[0]
+        outs = []
+        for off in range(0, n, self.n_slots):
+            chunk = imgs[off:off + self.n_slots]
+            k = chunk.shape[0]
+            if k < self.n_slots:
+                chunk = jnp.pad(chunk, ((0, self.n_slots - k), (0, 0), (0, 0)))
+            outs.append(self._forward(self.params, chunk)[:k])
+        return jnp.concatenate(outs, axis=0)
+
+    # -- request loop ------------------------------------------------------
+
+    def submit(self, req: ClassifyRequest) -> None:
+        self.queue.append(req)
+
+    def step(self) -> int:
+        """One engine tick: admit up to ``n_slots`` queued requests, run ONE
+        jitted gamma wave for the whole slot batch, complete the admitted
+        requests. Returns how many requests were served this tick."""
+        if self.vote_table is None:
+            raise RuntimeError("call fit(images, labels) before serving")
+        if not self.queue:
+            return 0
+        admitted = self.queue[:self.n_slots]
+        self.queue = self.queue[self.n_slots:]
+        h, w_ = self.cfg.image_hw
+        batch = np.zeros((self.n_slots, h, w_), np.float32)
+        for slot, req in enumerate(admitted):
+            batch[slot] = np.asarray(req.image, np.float32)
+        z = self._forward(self.params, jnp.asarray(batch))
+        preds = np.asarray(self._classify(z, self.vote_table))
+        for slot, req in enumerate(admitted):
+            req.result = int(preds[slot])
+            self.done[req.uid] = req
+        self.waves_served += 1
+        return len(admitted)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, ClassifyRequest]:
+        ticks = 0
+        while self.queue and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

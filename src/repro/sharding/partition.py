@@ -144,7 +144,11 @@ def spec_for(
                 if any(a in used for a in cand):
                     continue
                 if dim % _axes_size(mesh, cand) == 0 and _axes_size(mesh, cand) > 1:
-                    chosen = cand if len(cand) > 1 else cand[0]
+                    # keep the rule's own shape: tuple-valued assignments stay
+                    # tuples even when one axis survives (PartitionSpec does
+                    # not equate ('data',) with 'data' on all jax versions)
+                    chosen = (cand if len(cand) > 1 or not isinstance(assign, str)
+                              else cand[0])
                     used.update(cand)
                     break
         parts.append(chosen)

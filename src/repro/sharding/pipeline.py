@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.sharding import shard_map
+
 
 def pipeline_apply(
     layer_fn: Callable[[Any, jax.Array], jax.Array],
@@ -92,11 +94,11 @@ def pipeline_apply(
         return jax.lax.psum(outs, axis)
 
     xm = x.reshape((n_micro, mb) + x.shape[1:])
-    fn = jax.shard_map(
+    fn = shard_map(
         staged, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        check_replication=False,
     )
     out = fn(stacked_params, xm)
     return out.reshape((B,) + out.shape[2:])

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Fail if any ``DESIGN.md §N`` reference in the source tree is dangling.
+
+Docstrings cite the architecture reference by section number; this keeps
+those citations honest: every ``DESIGN.md §N`` occurring under ``src/``
+(and, for good measure, ``tests/``, ``examples/``, ``benchmarks/``) must
+match a ``## §N — ...`` heading in DESIGN.md. Run from the repo root:
+
+    python tools/check_docs.py
+
+Exit status 0 = all references resolve; 1 = dangling references (listed).
+Used by CI next to the tier-1 pytest run.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks")
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    design = root / "DESIGN.md"
+    if not design.exists():
+        print("check_docs: DESIGN.md does not exist", file=sys.stderr)
+        return 1
+    sections = {int(m) for m in SECTION_RE.findall(design.read_text())}
+
+    dangling = []
+    n_refs = 0
+    for d in SCAN_DIRS:
+        for path in sorted((root / d).rglob("*.py")):
+            text = path.read_text()
+            for lineno, line in enumerate(text.splitlines(), 1):
+                for m in REF_RE.finditer(line):
+                    n_refs += 1
+                    sec = int(m.group(1))
+                    if sec not in sections:
+                        dangling.append(
+                            f"{path.relative_to(root)}:{lineno}: "
+                            f"DESIGN.md §{sec} (have: {sorted(sections)})")
+
+    if dangling:
+        print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
+        for d in dangling:
+            print(f"  {d}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
+          f"all resolve into {len(sections)} sections")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
