@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Fail if training throughput (waves/sec) regressed against a baseline.
+
+Compares two ``benchmarks/run.py --json`` outputs: every baseline row that
+carries a ``waves_per_s`` derived metric must exist in the current run and
+be no more than ``--tol`` (default 25%) slower. Speedups and non-throughput
+rows never fail. Used by the CI ``bench`` job:
+
+    python benchmarks/check_regression.py benchmarks/baseline.json bench.json
+
+Exit 0 = within tolerance; 1 = regression or missing row (listed). The
+tolerance can be widened via ``--tol 0.4`` or ``BENCH_TOL=0.4`` for noisy
+runners. The comparison is hardware-relative: refresh the baseline by
+committing a green CI run's ``bench.json`` artifact, so baseline and
+current runs come from the same runner class (the initial baseline was
+recorded on the dev container — see its ``meta``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict
+
+METRIC = "waves_per_s"
+
+
+def _rows(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {
+        r["name"]: float(r["derived"][METRIC])
+        for r in data["rows"]
+        if METRIC in r.get("derived", {})
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", "0.25")),
+                    help="max fractional waves/sec regression (default 0.25)")
+    args = ap.parse_args()
+
+    base = _rows(args.baseline)
+    cur = _rows(args.current)
+    if not base:
+        print(f"check_regression: no {METRIC} rows in {args.baseline}",
+              file=sys.stderr)
+        return 1
+
+    failures = []
+    print(f"{'row':28s} {'baseline':>10s} {'current':>10s} {'ratio':>7s}")
+    for name, b in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{name}: missing from current run")
+            print(f"{name:28s} {b:10.3f} {'MISSING':>10s}")
+            continue
+        c = cur[name]
+        ratio = c / b if b else float("inf")
+        flag = "" if ratio >= 1.0 - args.tol else "  << REGRESSION"
+        print(f"{name:28s} {b:10.3f} {c:10.3f} {ratio:6.2f}x{flag}")
+        if ratio < 1.0 - args.tol:
+            failures.append(
+                f"{name}: {c:.3f} waves/s vs baseline {b:.3f} "
+                f"({100 * (1 - ratio):.1f}% slower, tol {100 * args.tol:.0f}%)")
+
+    if failures:
+        print(f"\ncheck_regression: {len(failures)} failure(s):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"\ncheck_regression: OK — {len(base)} {METRIC} rows within "
+          f"{100 * args.tol:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

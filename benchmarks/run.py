@@ -13,25 +13,44 @@ human-readable tables. Paper benchmarks:
 
 System benches (this framework beyond the paper):
 
-  column_throughput — images/s through the jitted fused TNN column step.
-  lm_step_micro     — smoke-config LM train-step wall time (tokens/s).
-  roofline_summary  — aggregates experiments/dryrun JSONs (§Roofline table).
+  column_throughput     — images/s through the jitted fused TNN column step.
+  tnn_wave_throughput   — reference-vs-pallas per-gamma-wave timing.
+  tnn_train_throughput  — waves/sec through the jitted online-STDP train
+                          step (DESIGN.md §9) + the hwmodel PPA priced for
+                          the trained network's actual (p, q) structure.
+  lm_step_micro         — smoke-config LM train-step wall time (tokens/s).
+  roofline_summary      — aggregates experiments/dryrun JSONs.
+
+Flags: ``--smoke`` shrinks every section for CI wall-clock; ``--json PATH``
+writes the structured rows for artifact upload and regression checking
+(``benchmarks/check_regression.py`` compares waves/sec against the
+committed ``benchmarks/baseline.json``).
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import platform
 import time
 from typing import Callable, Dict, List
 
 import numpy as np
 
 ROWS: List[str] = []
+ROWS_JSON: List[Dict] = []
 
 
-def _emit(name: str, us: float, derived: str) -> None:
-    ROWS.append(f"{name},{us:.3f},{derived}")
+def _emit(name: str, us: float, **derived) -> None:
+    """Record one benchmark row. Derived metrics are keyword values; the
+    CSV string and the ``--json`` payload are rendered from the same dict,
+    so nothing is lost to string round-tripping."""
+    text = ";".join(f"{k}={v:g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in derived.items())
+    ROWS.append(f"{name},{us:.3f},{text}")
+    ROWS_JSON.append({"name": name, "us_per_call": round(us, 3),
+                      "derived": derived})
 
 
 def _timeit(fn: Callable, n: int = 5) -> float:
@@ -57,7 +76,8 @@ def table1_columns() -> None:
               f"{r['time_ns_model']:7.2f}/{r['time_ns_paper']:<7.2f} "
               f"{r['area_mm2_model']:7.4f}/{r['area_mm2_paper']:<7.4f}")
         _emit(f"table1_{r['library']}_{r['p']}x{r['q']}", 0.0,
-              f"power_uw={r['power_uw_model']:.2f};paper={r['power_uw_paper']:.2f}")
+              power_uw=round(r["power_uw_model"], 2),
+              paper=round(r["power_uw_paper"], 2))
 
 
 def table2_prototype() -> None:
@@ -70,11 +90,12 @@ def table2_prototype() -> None:
               f"  area {r['area_mm2_model']:.2f}/{r['area_mm2_paper']:.2f} mm2"
               f"  EDP {r['edp_model']:.2f}/{r['edp_paper']:.2f} nJ-ns")
         _emit(f"table2_{r['library']}", 0.0,
-              f"edp={r['edp_model']:.3f};paper={r['edp_paper']:.3f}")
+              edp=round(r["edp_model"], 3), paper=round(r["edp_paper"], 3))
     t_std = hwmodel.network_transistors(hwmodel.PROTOTYPE_LAYERS, "standard")
     print(f"complexity: {t_std/1e6:.0f}M transistors / {t_std/4e6:.0f}M gates "
           f"(paper: 128M / 32M)")
-    _emit("table2_complexity", 0.0, f"transistors_M={t_std/1e6:.1f};paper=128")
+    _emit("table2_complexity", 0.0,
+          transistors_M=round(t_std / 1e6, 1), paper=128)
     imp = hwmodel.improvement_report()
     print("custom-vs-standard reductions:", {k: round(v, 3) for k, v in imp.items()})
 
@@ -87,18 +108,20 @@ def macro_layouts() -> None:
         ratio = m.t_std / max(m.t_custom, 1)
         print(f"{m.name:18s} std={m.t_std:4d}T custom={m.t_custom:4d}T "
               f"({ratio:.1f}x)  {m.description[:48]}")
-    _emit("macro_mux2to1gdi", 0.0, "std_T=12;custom_T=2")
+    _emit("macro_mux2to1gdi", 0.0, std_T=12, custom_T=2)
 
 
-def column_throughput() -> None:
+def column_throughput(smoke: bool = False) -> None:
     import jax
     import jax.numpy as jnp
     from repro.core.stdp import default_stabilize_table
     from repro.kernels import ops
 
     print("\n== fused TNN column step throughput (CPU host; TPU is target) ==")
-    B = 256
-    for (p, q, theta) in ((64, 8, 24), (128, 10, 48), (1024, 16, 384)):
+    B = 64 if smoke else 256
+    shapes = ((64, 8, 24),) if smoke else (
+        (64, 8, 24), (128, 10, 48), (1024, 16, 384))
+    for (p, q, theta) in shapes:
         kx, kw = jax.random.split(jax.random.PRNGKey(p))
         x = jax.random.randint(kx, (B, p), 0, 9, dtype=jnp.int8)
         w = jax.random.randint(kw, (p, q), 0, 8, dtype=jnp.int8)
@@ -106,10 +129,10 @@ def column_throughput() -> None:
         us = _timeit(lambda: jax.block_until_ready(fwd(x, w)), n=3)
         per_img = us / B
         print(f"{p}x{q}: {us:9.1f} us/wave-batch ({per_img:7.3f} us/image)")
-        _emit(f"column_forward_{p}x{q}", us, f"us_per_image={per_img:.3f}")
+        _emit(f"column_forward_{p}x{q}", us, us_per_image=round(per_img, 3))
 
 
-def tnn_wave_throughput() -> None:
+def tnn_wave_throughput(smoke: bool = False) -> None:
     """Reference vs fused-Pallas per-gamma-wave timing for the prototype.
 
     ``TNN_BENCH_SITES`` (perfect square, default 625 = the paper's full
@@ -125,9 +148,9 @@ def tnn_wave_throughput() -> None:
         with_impl,
     )
 
-    sites = int(os.environ.get("TNN_BENCH_SITES", "625"))
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
     side = image_side(sites)
-    B = 32
+    B = 8 if smoke else 32
     print(f"\n== prototype learning wave ({sites}+{sites} columns, batch {B}, "
           f"reference vs pallas) ==")
     cfg = prototype_config(sites=sites, theta1=20, theta2=6)
@@ -144,14 +167,75 @@ def tnn_wave_throughput() -> None:
         us_by_impl[impl] = us
         print(f"{impl:9s} train wave: {us/1e3:9.1f} ms/batch({B}) = "
               f"{us/B:8.0f} us/image")
-        _emit(f"tnn_prototype_wave_{impl}", us, f"us_per_image={us/B:.1f}")
+        _emit(f"tnn_prototype_wave_{impl}", us,
+              us_per_image=round(us / B, 1))
     ratio = us_by_impl["direct"] / max(us_by_impl["pallas"], 1e-9)
     print(f"pallas/reference speedup: {ratio:.2f}x on {jax.default_backend()} "
           f"(silicon target: 19.15 ns/image @ 1.69 mW)")
-    _emit("tnn_prototype_wave_speedup", 0.0, f"x={ratio:.3f}")
+    _emit("tnn_prototype_wave_speedup", 0.0, x=round(ratio, 3))
 
 
-def lm_step_micro() -> None:
+def tnn_train_throughput(smoke: bool = False) -> None:
+    """Training throughput through the production online-STDP train step.
+
+    Times the jitted ``core.network.make_train_step`` (forward + counter-
+    form STDP + saturating apply, DESIGN.md §9) for the reference and fused
+    Pallas backends and reports **waves/sec** — the metric the CI ``bench``
+    job regression-checks against ``benchmarks/baseline.json``. Then prints
+    the hwmodel PPA report priced for the trained network's ACTUAL
+    (n_cols, p, q) structure — what this exact network would cost in the
+    paper's 7nm silicon — rather than the fixed full-prototype geometry.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core import hwmodel, init_train_state, make_train_step
+
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
+    B = 8 if smoke else 16
+    theta1, theta2 = default_thetas(sites)
+    print(f"\n== online-STDP training throughput ({sites}+{sites} columns, "
+          f"batch {B}, reference vs pallas) ==")
+    wps: Dict[str, float] = {}
+    cfg = None
+    for impl in ("direct", "pallas"):
+        cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                             impl=impl)
+        # donate=False: the timing loop re-feeds the same state buffers.
+        step = make_train_step(cfg, donate=False)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        T = cfg.layers[0].column.wave.T
+        x = jax.random.randint(
+            jax.random.PRNGKey(1), (B, sites, cfg.layers[0].column.p),
+            0, T + 1, dtype=jnp.int8)
+        us = _timeit(lambda: jax.block_until_ready(step(state, x)[1]),
+                     n=3 if smoke else 5)
+        wps[impl] = 1e6 / us
+        print(f"{impl:9s} train step: {us/1e3:9.1f} ms/wave = "
+              f"{wps[impl]:8.2f} waves/s ({B*wps[impl]:9.1f} images/s)")
+        _emit(f"tnn_train_wave_{impl}", us,
+              waves_per_s=round(wps[impl], 3),
+              images_per_s=round(B * wps[impl], 1))
+    ratio = wps["pallas"] / max(wps["direct"], 1e-12)
+    print(f"pallas/reference training speedup: {ratio:.2f}x "
+          f"on {jax.default_backend()}")
+    _emit("tnn_train_speedup", 0.0, x=round(ratio, 3))
+
+    layers = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
+    print(f"hwmodel PPA for the trained network's actual structure {layers} "
+          f"({cfg.n_neurons:,} neurons / {cfg.n_synapses:,} synapses):")
+    for lib in hwmodel.LIBRARIES:
+        ppa = hwmodel.network_ppa(layers, lib)
+        tr = hwmodel.network_transistors(layers, lib)
+        print(f"  7nm {lib:8s}: {ppa.power_mw:8.3f} mW  {ppa.time_ns:6.2f} "
+              f"ns/image  {ppa.area_mm2:7.4f} mm2  EDP {ppa.edp_nj_ns:7.4f} "
+              f"nJ-ns  ({tr/1e6:.2f}M transistors)")
+        _emit(f"tnn_trained_ppa_{lib}", 0.0,
+              power_mw=round(ppa.power_mw, 4), time_ns=round(ppa.time_ns, 2),
+              area_mm2=round(ppa.area_mm2, 4), edp=round(ppa.edp_nj_ns, 4))
+
+
+def lm_step_micro(smoke: bool = False) -> None:
     import jax
     from repro.configs import smoke_config
     from repro.data.tokens import TokenStream
@@ -159,7 +243,9 @@ def lm_step_micro() -> None:
     from repro.train import train_step as TS
 
     print("\n== smoke LM train step (CPU) ==")
-    for arch in ("llama3.2-3b", "mixtral-8x22b", "zamba2-7b"):
+    archs = ("llama3.2-3b",) if smoke else (
+        "llama3.2-3b", "mixtral-8x22b", "zamba2-7b")
+    for arch in archs:
         cfg = smoke_config(arch)
         opt = OPT.OptConfig(lr=1e-3)
         step = jax.jit(TS.make_train_step(cfg, opt, TS.TrainConfig(kv_chunk=8)))
@@ -173,7 +259,7 @@ def lm_step_micro() -> None:
         us = _timeit(run, n=3)
         toks = 4 * 32 / (us / 1e6)
         print(f"{arch:18s} {us/1e3:8.2f} ms/step ({toks:,.0f} tok/s smoke-CPU)")
-        _emit(f"lm_step_{arch}", us, f"tokens_per_s={toks:.0f}")
+        _emit(f"lm_step_{arch}", us, tokens_per_s=round(toks))
 
 
 def roofline_summary() -> None:
@@ -193,20 +279,44 @@ def roofline_summary() -> None:
         tag = f"{d['arch']} x {d['cell']} x {d['mesh']}"
         print(f"{tag:52s} {r['bottleneck']:11s} "
               f"{100*r['roofline_fraction']:8.2f}% {100*r['useful_flop_fraction']:7.1f}%")
-    _emit("roofline_cells", 0.0, f"n={len(files)}")
+    _emit("roofline_cells", 0.0, n=len(files))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes/sections for CI wall-clock")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured rows to PATH (CI artifact; "
+                         "input to check_regression.py)")
+    args = ap.parse_args()
+
+    t0 = time.time()
     table1_columns()
     table2_prototype()
     macro_layouts()
-    column_throughput()
-    tnn_wave_throughput()
-    lm_step_micro()
+    column_throughput(smoke=args.smoke)
+    tnn_wave_throughput(smoke=args.smoke)
+    tnn_train_throughput(smoke=args.smoke)
+    lm_step_micro(smoke=args.smoke)
     roofline_summary()
     print("\nname,us_per_call,derived")
     for row in ROWS:
         print(row)
+    if args.json:
+        payload = {
+            "meta": {
+                "smoke": args.smoke,
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+                "jax": __import__("jax").__version__,
+                "wall_s": round(time.time() - t0, 1),
+            },
+            "rows": ROWS_JSON,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {len(ROWS_JSON)} rows to {args.json}")
 
 
 if __name__ == "__main__":

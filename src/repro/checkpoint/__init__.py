@@ -1,1 +1,10 @@
 # checkpoint subpackage
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    restore_tnn,
+    tnn_abstract_state,
+    tnn_config_fingerprint,
+)
+
+__all__ = ["Checkpointer", "restore_tnn", "tnn_abstract_state",
+           "tnn_config_fingerprint"]

@@ -15,6 +15,14 @@ sharding). This is the re-mesh path for elastic scaling and for resuming a
 In a true multi-host deployment each host would write only its addressable
 shards; the single-process container writes full arrays (noted in
 DESIGN.md §8). The directory protocol is host-count independent.
+
+TNN training state (DESIGN.md §9) rides on the same generic protocol: the
+checkpoint is the pytree ``{"params": {"layer_00": ...}, "rng": key,
+"wave": i32, "vote_table": (S, q, C) f32}`` — weights, the RNG key and wave
+counter make resume bit-exact, and the vote table lets ``TNNEngine``
+warm-start classification without re-running ``fit``.
+:func:`tnn_abstract_state` builds the matching restore target from a
+``NetworkConfig`` alone.
 """
 from __future__ import annotations
 
@@ -27,6 +35,68 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def tnn_abstract_state(cfg) -> Dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) TNN training checkpoint for ``restore``.
+
+    Mirrors the state the TNN trainer saves: per-layer int8 weights named
+    ``layer_NN`` (the ``params_to_tree`` export form), the uint32 threefry
+    RNG key, the int32 wave counter, and the last layer's (sites, q,
+    n_classes) float32 vote table (all-zeros until the first labelling
+    pass — ``extra["has_vote"]`` records whether it is meaningful).
+    """
+    params = {
+        f"layer_{i:02d}": jax.ShapeDtypeStruct(
+            (l.n_cols, l.column.p, l.column.q), np.int8)
+        for i, l in enumerate(cfg.layers)
+    }
+    last = cfg.layers[-1]
+    return {
+        "params": params,
+        "rng": jax.ShapeDtypeStruct((2,), np.uint32),
+        "wave": jax.ShapeDtypeStruct((), np.int32),
+        "vote_table": jax.ShapeDtypeStruct(
+            (last.n_cols, last.column.q, cfg.n_classes), np.float32),
+    }
+
+
+def tnn_config_fingerprint(cfg) -> str:
+    """Compact structural+dynamics identity of a network config, stored in
+    checkpoint metadata and validated on restore: weights and especially
+    the vote table are only valid under the geometry and firing thresholds
+    they were trained with. Backend (``impl``) is deliberately excluded —
+    params are backend-invariant, so a pallas-trained checkpoint serves on
+    any impl."""
+    layers = ";".join(
+        f"{l.n_cols}x{l.column.p}x{l.column.q}t{l.column.theta}"
+        for l in cfg.layers)
+    T = cfg.layers[0].column.wave.T
+    return f"tnn[{layers}]T{T}c{cfg.n_classes}"
+
+
+def restore_tnn(ckpt: "Checkpointer", cfg, step: Optional[int] = None):
+    """Restore TNN training state by config: ``(state, extra)`` at ``step``
+    (default: latest). The warm-start entry point for trainer resume and
+    ``TNNEngine.from_checkpoint``.
+
+    Refuses checkpoints whose recorded config fingerprint doesn't match
+    ``cfg`` (foreign LM checkpoints, different sites/thetas) BEFORE loading
+    any arrays — resuming would either crash on leaf mismatch or silently
+    continue under the wrong dynamics.
+    """
+    if step is None:
+        step = ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt.dir}")
+    want = tnn_config_fingerprint(cfg)
+    got = ckpt.peek_extra(step).get("config")
+    if got != want:
+        raise ValueError(
+            f"checkpoint step {step} under {ckpt.dir!r} was written for "
+            f"{got!r}, not this run's {want!r} — point it at the matching "
+            f"run or a fresh directory")
+    return ckpt.restore(step, tnn_abstract_state(cfg))
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
@@ -110,6 +180,14 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def peek_extra(self, step: int) -> Dict[str, Any]:
+        """Read a checkpoint's extra metadata without loading any arrays —
+        how resume validates compatibility (arch/config fingerprint)
+        before committing to a full restore."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            return json.load(f).get("extra", {})
 
     def restore(self, step: int, abstract_state, shardings=None):
         """Load a checkpoint into the given target structure (+ optional

@@ -46,6 +46,14 @@ def crop_field(images, sites: int):
     return images[:, r0:r0 + side, c0:c0 + side]
 
 
+def default_thetas(sites: int):
+    """Launcher convention shared by train/serve: the paper's thresholds at
+    full geometry, lowered for reduced smoke fields so units still fire.
+    Train and serve MUST agree — a checkpointed vote table is only valid
+    under the firing thresholds it was built with (DESIGN.md §9)."""
+    return (24, 8) if sites >= 625 else (12, 3)
+
+
 def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8,
                    impl: str = "direct"):
     side = image_side(sites)
@@ -54,6 +62,25 @@ def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8,
     )
     cfg = dataclasses.replace(cfg, image_hw=(side, side))
     return with_impl(cfg, impl)
+
+
+def train_config(sites: int = 625, smoke: bool = False, **overrides):
+    """Trainer hyper-parameters for the prototype (DESIGN.md §9).
+
+    The full-geometry defaults run the paper-prototype scale (625 sites,
+    512-image labelled set); ``smoke=True`` shrinks the stream and cadence
+    so one epoch + checkpoint + resume completes in seconds on a CPU
+    container (the ``launch/train.py --arch tnn-mnist --smoke`` path).
+    Keyword overrides are applied last.
+    """
+    from repro.train.tnn_trainer import TNNTrainConfig
+
+    kw = dict(epochs=1, wave_batch=16, train_size=512, eval_size=256,
+              ckpt_dir="/tmp/repro_tnn_ckpt")
+    if smoke or sites < 625:
+        kw.update(wave_batch=8, train_size=64, eval_size=32, log_every=2)
+    kw.update(overrides)
+    return TNNTrainConfig(**kw)
 
 
 CONFIG = network_config()

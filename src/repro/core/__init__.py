@@ -2,7 +2,13 @@
 # coding, RNL synapses, pac-adder neurons, WTA, stabilized STDP) and the
 # macro-level PPA hardware model that reproduces the paper's Tables I/II.
 from repro.core.temporal import WaveSpec, encode_intensity, decode_time
-from repro.core.stdp import STDPConfig, stdp_update, default_stabilize_table
+from repro.core.stdp import (
+    STDPConfig,
+    apply_net,
+    default_stabilize_table,
+    stdp_net_from_uniforms,
+    stdp_update,
+)
 from repro.core.column import (
     ColumnConfig,
     body_potential,
@@ -13,14 +19,21 @@ from repro.core.column import (
     init_weights,
     wta_inhibit,
 )
-from repro.core.layer import LayerConfig, init_layer, layer_forward, layer_step
+from repro.core.layer import (
+    LayerConfig, init_layer, layer_forward, layer_stdp_net, layer_step,
+)
 from repro.core.network import (
     NetworkConfig,
     prototype_config,
     init_network,
+    init_train_state,
     encode_images,
+    make_train_step,
     network_forward,
+    network_train_step,
     network_train_wave,
+    params_from_tree,
+    params_to_tree,
     build_vote_table,
     classify,
     build_centroids,
@@ -32,10 +45,14 @@ from repro.core import hwmodel, macros
 __all__ = [
     "WaveSpec", "encode_intensity", "decode_time",
     "STDPConfig", "stdp_update", "default_stabilize_table",
+    "stdp_net_from_uniforms", "apply_net",
     "ColumnConfig", "body_potential", "column_forward", "column_forward_matmul",
     "column_step", "crossing_time", "init_weights", "wta_inhibit",
-    "LayerConfig", "init_layer", "layer_forward", "layer_step",
-    "NetworkConfig", "prototype_config", "init_network", "encode_images",
-    "network_forward", "network_train_wave", "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",
+    "LayerConfig", "init_layer", "layer_forward", "layer_stdp_net", "layer_step",
+    "NetworkConfig", "prototype_config", "init_network", "init_train_state",
+    "encode_images", "make_train_step",
+    "network_forward", "network_train_step", "network_train_wave",
+    "params_from_tree", "params_to_tree",
+    "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",
     "hwmodel", "macros",
 ]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.column import (
     ColumnConfig, column_forward, column_forward_matmul, init_weights, wta_inhibit,
 )
-from repro.core.stdp import stdp_update
+from repro.core.stdp import stdp_net_from_uniforms, stdp_update
 from repro.core.temporal import WaveSpec
 from repro.kernels import ops as _kops
 
@@ -106,6 +106,46 @@ def layer_step(
             in_axes=(0, 1, 1, 0),
         )(w, x, z, keys)
     return z, w
+
+
+def layer_stdp_net(
+    x: jax.Array,
+    z: jax.Array,
+    w: jax.Array,
+    cfg: LayerConfig,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+) -> jax.Array:
+    """Net STDP counter deltas for a whole layer, pre-clip (DESIGN.md §9).
+
+    x: (B, C, p) inputs; z: (B, C, q) post-WTA outputs; w: (C, p, q) int8;
+    u_up/u_dn: (C, B, p, q) per-column uniforms (the explicit-uniform form of
+    the "sum" batch reduce). Returns (C, p, q) i32 deltas that sum across
+    disjoint batch shards; apply once with :func:`repro.core.stdp.apply_net`.
+
+    Backend follows ``cfg.column.impl``: "pallas" runs the fused kernel in
+    net mode (one padded launch for the layer), the references vmap the pure
+    counter form per column — bit-exact with each other and with the applied
+    update of :func:`layer_step`.
+    """
+    spec, stdp = cfg.column.wave, cfg.column.stdp
+    if stdp.batch_reduce != "sum":
+        raise ValueError(
+            f"counter-form STDP requires batch_reduce='sum', got "
+            f"{stdp.batch_reduce!r} ('seq'/'gauss' do not decompose into "
+            f"shard-additive counters)")
+    if cfg.column.impl == "pallas":
+        return _kops.layer_stdp_fused(
+            w, x, z, u_up, u_dn,
+            T=spec.T, w_max=spec.w_max, table=stdp.table_tuple(spec),
+            mu_capture=stdp.mu_capture, mu_backoff=stdp.mu_backoff,
+            mu_search=stdp.mu_search, out="net",
+        )
+    return jax.vmap(
+        lambda wc, xc, zc, uu, ud: stdp_net_from_uniforms(
+            wc, xc, zc, uu, ud, spec, stdp),
+        in_axes=(0, 1, 1, 0, 0),
+    )(w, x, z, u_up, u_dn)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ throughout; classification = per-site winner labelling + majority vote.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +20,10 @@ from repro.core.layer import (
     extract_patches,
     init_layer,
     layer_forward,
+    layer_stdp_net,
     layer_step,
 )
-from repro.core.stdp import STDPConfig
+from repro.core.stdp import STDPConfig, apply_net
 from repro.core.temporal import WaveSpec
 
 
@@ -137,6 +138,140 @@ def network_train_wave(
         new_params.append(w)
         outs.append(x)
     return outs, new_params
+
+
+# ---------------------------------------------------------------------------
+# Production training step: counter-form STDP, shardable, donated (§9).
+# ---------------------------------------------------------------------------
+
+
+def params_to_tree(params: Sequence[jax.Array]) -> Dict[str, jax.Array]:
+    """Weight list -> named pytree ({"layer_00": w0, ...}) with stable leaf
+    paths — the export form checkpoints and serving warm-starts use."""
+    return {f"layer_{i:02d}": w for i, w in enumerate(params)}
+
+
+def params_from_tree(
+    tree: Dict[str, jax.Array], cfg: NetworkConfig
+) -> List[jax.Array]:
+    """Inverse of :func:`params_to_tree`; validates per-layer shapes."""
+    params = []
+    for i, lcfg in enumerate(cfg.layers):
+        key = f"layer_{i:02d}"
+        if key not in tree:
+            raise KeyError(f"params tree missing {key} (have {sorted(tree)})")
+        w = tree[key]
+        want = (lcfg.n_cols, lcfg.column.p, lcfg.column.q)
+        if tuple(w.shape) != want:
+            raise ValueError(f"{key}: shape {tuple(w.shape)} != {want}")
+        params.append(w)
+    return params
+
+
+def network_train_step(
+    x: jax.Array,
+    params: Sequence[jax.Array],
+    cfg: NetworkConfig,
+    rng: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    data_shards: int = 1,
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """One gamma wave of online STDP — the counter-form of
+    :func:`network_train_wave`, bit-exact with it and data-shardable.
+
+    x: (b, C, p) spike times — the local batch rows when running inside a
+    ``shard_map`` over ``axis_name``, the full batch otherwise. Every shard
+    draws the STDP uniforms for the GLOBAL batch (``b * data_shards`` rows)
+    from the same per-layer/per-column key split and slices out its own
+    rows, computes local net counters, and psums them over ``axis_name``
+    before one saturating apply — so the trained weights are invariant to
+    the data-sharding layout (1 device or many give identical bits;
+    DESIGN.md §9). Requires ``STDPConfig.batch_reduce == "sum"``.
+
+    Returns (per-layer post-WTA spike times, new per-layer weights).
+    """
+    b_local = x.shape[0]
+    B = b_local * data_shards
+    row0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * b_local
+    keys = jax.random.split(rng, len(cfg.layers))
+    new_params, outs = [], []
+    for w, lcfg, k in zip(params, cfg.layers, keys):
+        z = layer_forward(x, w, lcfg)
+        p, q = lcfg.column.p, lcfg.column.q
+        col_keys = jax.random.split(k, lcfg.n_cols)
+        u = jax.vmap(
+            lambda kk: jax.random.uniform(kk, (2, B, p, q), dtype=jnp.float32)
+        )(col_keys)  # (C, 2, B, p, q) — the global batch's draws
+        u = jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2)
+        net = layer_stdp_net(x, z, w, lcfg, u[:, 0], u[:, 1])
+        if axis_name is not None:
+            net = jax.lax.psum(net, axis_name)
+        w = apply_net(w, net, lcfg.column.wave)
+        new_params.append(w)
+        outs.append(z)
+        x = z
+    return outs, new_params
+
+
+def make_train_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
+    """Build the jitted production train step: ``(state, x) -> (state, z)``.
+
+    ``state`` is the training pytree ``{"params": {"layer_00": ...}, "rng":
+    key, "wave": i32}``; ``x`` is one encoded wave batch (B, C, p) int8. The
+    returned ``z`` is the last layer's post-WTA spike times (for metrics /
+    vote-table building). The state argument's buffers are donated, so the
+    weight update happens in place on device — callers must keep only the
+    returned state (the trainer checkpoints by materializing to host first).
+
+    With a ``mesh`` (needs a "data" axis) the batch axis is shard_map-
+    sharded over "data" exactly like ``TNNEngine``: params/rng replicated,
+    x and z on the data axis, STDP counters psum'd — same bits as the
+    unsharded step (DESIGN.md §9). B must divide by the data axis size.
+    """
+    for l in cfg.layers:
+        if l.column.stdp.batch_reduce != "sum":
+            raise ValueError("make_train_step requires batch_reduce='sum'")
+
+    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+
+    def step(state, x):
+        params = params_from_tree(state["params"], cfg)
+        key, sub = jax.random.split(state["rng"])
+        outs, new_params = network_train_step(
+            x, params, cfg, sub,
+            axis_name=None if mesh is None else "data",
+            data_shards=n_data,
+        )
+        new_state = {
+            "params": params_to_tree(new_params),
+            "rng": key,
+            "wave": state["wave"] + 1,
+        }
+        return new_state, outs[-1]
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import shard_map
+
+        step = shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P("data")),
+            out_specs=(P(), P("data")),
+        )
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def init_train_state(rng: jax.Array, cfg: NetworkConfig) -> Dict:
+    """Fresh training state for :func:`make_train_step`: random weights, a
+    forked step key, wave counter 0."""
+    k_params, k_stream = jax.random.split(rng)
+    return {
+        "params": params_to_tree(init_network(k_params, cfg)),
+        "rng": k_stream,
+        "wave": jnp.asarray(0, jnp.int32),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -155,6 +155,43 @@ def stdp_update(
     return jnp.clip(w, 0, spec.w_max).astype(jnp.int8)
 
 
+def stdp_net_from_uniforms(
+    weights: jax.Array,
+    x: jax.Array,
+    z: jax.Array,
+    u_up: jax.Array,
+    u_dn: jax.Array,
+    spec: WaveSpec,
+    cfg: STDPConfig,
+) -> jax.Array:
+    """Counter form of the batched-"sum" update: net inc-dec, pre-clip.
+
+    weights: (p, q); x: (B, p); z: (B, q); u_up/u_dn: (B, p, q) uniforms —
+    the same draws the "sum" branch of :func:`stdp_update` makes internally
+    (``u[0]``/``u[1]`` of a ``(2, B, p, q)`` uniform), passed in explicitly.
+    Returns (p, q) i32 net counter deltas.
+
+    This is the additive half of the update: deltas from disjoint batch
+    shards sum (``psum`` over the mesh's "data" axis) before ONE saturating
+    :func:`apply_net`, which makes data-parallel training produce exactly
+    the full-batch result (DESIGN.md §9).
+    """
+    table = cfg.table(spec)
+    capture, backoff, search = stdp_cases(x, z, spec.T)
+    f = table[weights.astype(jnp.int32)]
+    p_up = capture * (cfg.mu_capture * f) + search * jnp.float32(cfg.mu_search)
+    p_dn = backoff * (cfg.mu_backoff * f)
+    inc = (u_up < p_up).astype(jnp.int32).sum(axis=0)
+    dec = (u_dn < p_dn).astype(jnp.int32).sum(axis=0)
+    return inc - dec
+
+
+def apply_net(weights: jax.Array, net: jax.Array, spec: WaveSpec) -> jax.Array:
+    """Saturating counter apply: clip(w + net, 0, w_max) as int8 — the
+    ``syn_weight_update`` FSM once per wave, after counter aggregation."""
+    return jnp.clip(weights.astype(jnp.int32) + net, 0, spec.w_max).astype(jnp.int8)
+
+
 def _single_wave(w, x, z, key, table, spec: WaveSpec, cfg: STDPConfig):
     capture, backoff, search = stdp_cases(x, z, spec.T)
     f = table[w.astype(jnp.int32)]

@@ -135,8 +135,10 @@ def stdp_update(
     block_p: int = 128,
     block_b: int = 128,
     interpret: bool | None = None,
+    out: str = "weights",
 ) -> jax.Array:
-    """Fused STDP wave update. Returns new (p, q) i32 weights."""
+    """Fused STDP wave update. Returns new (p, q) i32 weights, or the raw
+    pre-clip (p, q) i32 net counters when ``out="net"`` (DESIGN.md §9)."""
     B, p = x.shape
     q = z.shape[1]
     block_b, block_p, Bp, pp, interpret = _launch_geom(
@@ -149,13 +151,13 @@ def stdp_update(
         w = jnp.pad(w, ((0, pp - p), (0, 0)))
         u_up = jnp.pad(u_up, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
         u_dn = jnp.pad(u_dn, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
-    out = stdp_update_pallas(
+    res = stdp_update_pallas(
         w, x, z, u_up, u_dn,
         T=T, w_max=w_max, table=tuple(table),
         mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
-        block_p=block_p, block_b=block_b, interpret=interpret,
+        block_p=block_p, block_b=block_b, interpret=interpret, out=out,
     )
-    return out[:p]
+    return res[:p]
 
 
 def layer_forward_fused(
@@ -207,6 +209,7 @@ def layer_stdp_fused(
     block_p: int = 128,
     block_b: int = 128,
     interpret: bool | None = None,
+    out: str = "weights",
 ) -> jax.Array:
     """Whole-layer fused STDP: one wave of learning for every column at once.
 
@@ -215,6 +218,10 @@ def layer_stdp_fused(
     draws match the reference path's per-column rng split). Returns (C, p, q)
     i32 weights. Padding happens once at the layer level — padded batch rows
     carry u=1.0 so they can never win a Bernoulli compare.
+
+    ``out="net"`` returns the pre-clip (C, p, q) i32 batch-summed counter
+    deltas instead of applied weights — the additive form the sharded train
+    step psums over the mesh's "data" axis (DESIGN.md §9).
     """
     B, C, p = x.shape
     q = w.shape[2]
@@ -232,7 +239,7 @@ def layer_stdp_fused(
         stdp_update_pallas,
         T=T, w_max=w_max, table=tuple(table),
         mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
-        block_p=block_p, block_b=block_b, interpret=interpret,
+        block_p=block_p, block_b=block_b, interpret=interpret, out=out,
     )
-    out = jax.vmap(f, in_axes=(0, 1, 1, 0, 0))(w, x, z, u_up, u_dn)
-    return out[:, :p]
+    res = jax.vmap(f, in_axes=(0, 1, 1, 0, 0))(w, x, z, u_up, u_dn)
+    return res[:, :p]

@@ -34,6 +34,7 @@ def _stdp_kernel(
     mu_backoff: float,
     mu_search: float,
     n_b_tiles: int,
+    out: str,
 ):
     bt_idx = pl.program_id(1)
 
@@ -67,14 +68,19 @@ def _stdp_kernel(
 
     @pl.when(bt_idx == n_b_tiles - 1)
     def _apply():
-        out_ref[...] = jnp.clip(w + net_ref[...], 0, w_max)
+        if out == "net":
+            # Pre-clip counter deltas: the form that composes additively
+            # across data shards (psum, then one saturating apply).
+            out_ref[...] = net_ref[...]
+        else:
+            out_ref[...] = jnp.clip(w + net_ref[...], 0, w_max)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "T", "w_max", "table", "mu_capture", "mu_backoff", "mu_search",
-        "block_p", "block_b", "interpret",
+        "block_p", "block_b", "interpret", "out",
     ),
 )
 def stdp_update_pallas(
@@ -93,8 +99,17 @@ def stdp_update_pallas(
     block_p: int = 128,
     block_b: int = 128,
     interpret: bool = False,
+    out: str = "weights",
 ) -> jax.Array:
-    """w: (p, q) ints; x: (B, p); z: (B, q); u_*: (B, p, q) f32 uniforms."""
+    """w: (p, q) ints; x: (B, p); z: (B, q); u_*: (B, p, q) f32 uniforms.
+
+    ``out="weights"`` (default) returns the saturating-updated weights;
+    ``out="net"`` returns the raw batch-summed inc-dec counters *before*
+    the clip — the additive form sharded training psums over the mesh's
+    "data" axis before one final saturating apply (DESIGN.md §9).
+    """
+    if out not in ("weights", "net"):
+        raise ValueError(f"out={out!r}; one of ('weights', 'net')")
     B, p = x.shape
     q = z.shape[1]
     assert w.shape == (p, q) and u_up.shape == (B, p, q) and u_dn.shape == (B, p, q)
@@ -107,7 +122,7 @@ def stdp_update_pallas(
         _stdp_kernel,
         T=T, w_max=w_max, table=tuple(table),
         mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
-        n_b_tiles=n_b,
+        n_b_tiles=n_b, out=out,
     )
     return pl.pallas_call(
         kernel,

@@ -10,6 +10,13 @@ path, batch axis data-parallel over the mesh):
 
     PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
         --requests 32 --slots 8 --sites 64 --impl pallas
+
+``--from-ckpt DIR`` warm-starts the engine from a TNN training checkpoint
+(weights + vote table, DESIGN.md §9) instead of ad-hoc warm-up + fit —
+the deployment path after ``launch/train.py --arch tnn-mnist``:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
+        --from-ckpt /tmp/tnn_ckpt --sites 16 --requests 16
 """
 from __future__ import annotations
 
@@ -47,7 +54,9 @@ def serve_lm(args: argparse.Namespace) -> None:
 
 
 def serve_tnn(args: argparse.Namespace) -> None:
-    from repro.configs.tnn_mnist import crop_field, network_config
+    from repro.configs.tnn_mnist import (
+        crop_field, default_thetas, network_config,
+    )
     from repro.core import init_network, network_train_wave, encode_images
     from repro.data.mnist_like import digits
     from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
@@ -57,21 +66,33 @@ def serve_tnn(args: argparse.Namespace) -> None:
     n_slots = args.slots
     if n_slots % mesh.shape.get("data", 1):
         n_slots = mesh.shape["data"] * max(n_slots // mesh.shape["data"], 1)
-    cfg = network_config(sites=args.sites, theta1=12, theta2=3, impl=args.impl)
+    theta1, theta2 = default_thetas(args.sites)
+    cfg = network_config(sites=args.sites, theta1=theta1, theta2=theta2,
+                         impl=args.impl)
     print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
           f"on {describe(mesh)}")
-    params = init_network(jax.random.PRNGKey(0), cfg)
+    if args.from_ckpt:
+        # trained deployment: weights + vote table from the training
+        # checkpoint, no warm-up or fit pass (DESIGN.md §9)
+        eng = TNNEngine.from_checkpoint(
+            args.from_ckpt, cfg, n_slots=n_slots, impl=args.impl, mesh=mesh)
+        print(f"warm-started from {args.from_ckpt} "
+              f"(vote table: {eng.vote_table is not None})")
+        if eng.vote_table is None:
+            imgs, labs = digits(max(128, 4 * n_slots), seed=1)
+            eng.fit(crop_field(imgs, args.sites), labs)
+    else:
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        imgs, labs = digits(max(128, 4 * n_slots), seed=1)
+        imgs = crop_field(imgs, args.sites)
+        x = jnp.asarray(encode_images(jnp.asarray(imgs), cfg))
+        key = jax.random.PRNGKey(1)
+        for _ in range(args.train_waves):  # short unsupervised warm-up
+            key, k = jax.random.split(key)
+            _, params = network_train_wave(x[:16], params, cfg, k)
 
-    imgs, labs = digits(max(128, 4 * n_slots), seed=1)
-    imgs = crop_field(imgs, args.sites)
-    x = jnp.asarray(encode_images(jnp.asarray(imgs), cfg))
-    key = jax.random.PRNGKey(1)
-    for _ in range(args.train_waves):  # short unsupervised warm-up
-        key, k = jax.random.split(key)
-        _, params = network_train_wave(x[:16], params, cfg, k)
-
-    eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl, mesh=mesh)
-    eng.fit(imgs, labs)
+        eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl, mesh=mesh)
+        eng.fit(imgs, labs)
 
     test_imgs, test_labs = digits(args.requests, seed=2)
     test_imgs = crop_field(test_imgs, args.sites)
@@ -98,6 +119,9 @@ def main() -> None:
     ap.add_argument("--impl", default="pallas",
                     choices=("direct", "matmul", "pallas"))
     ap.add_argument("--train-waves", type=int, default=4)
+    ap.add_argument("--from-ckpt", default=None, metavar="DIR",
+                    help="warm-start from a TNN training checkpoint "
+                         "(weights + vote table; DESIGN.md §9)")
     args = ap.parse_args()
     if args.arch == "tnn-mnist":
         serve_tnn(args)

@@ -7,6 +7,14 @@ the integration test exercises it.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
         --steps 20 --batch 4 --seq 64
+
+``--arch tnn-mnist`` instead drives the paper's prototype through the
+wave-batched online-STDP trainer (DESIGN.md §9): epochs of gamma waves over
+the fused Pallas path, vote-table evals, and checkpoints that resume
+bit-exactly (re-run the same command to continue a run):
+
+    PYTHONPATH=src python -m repro.launch.train --arch tnn-mnist --smoke \
+        --epochs 1 --ckpt-dir /tmp/tnn_ckpt
 """
 from __future__ import annotations
 
@@ -27,6 +35,36 @@ from repro.train import train_step as TS
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+def train_tnn(args: argparse.Namespace) -> None:
+    """Wave-batched online STDP over the prototype (DESIGN.md §9)."""
+    from repro.configs.tnn_mnist import (
+        default_thetas, network_config, train_config,
+    )
+    from repro.train.tnn_trainer import TNNTrainer
+
+    sites = 16 if args.smoke and args.sites == 625 else args.sites
+    theta1, theta2 = default_thetas(sites)
+    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                         impl=args.impl)
+    mesh = make_host_mesh()
+    ckpt_dir = args.ckpt_dir or "/tmp/repro_tnn_ckpt"
+    tcfg = train_config(
+        sites=sites, smoke=args.smoke, epochs=args.epochs,
+        ckpt_dir=ckpt_dir,
+        eval_every=args.eval_every, ckpt_every=args.ckpt_every,
+        metrics_path=ckpt_dir + "/metrics.jsonl")
+    ndata = int(mesh.shape.get("data", 1))
+    if tcfg.wave_batch % ndata:
+        tcfg = dataclasses.replace(
+            tcfg, wave_batch=ndata * max(tcfg.wave_batch // ndata, 1))
+    print(f"training tnn-mnist ({cfg.n_neurons:,} neurons, "
+          f"{cfg.n_synapses:,} synapses, impl={args.impl}) on {describe(mesh)}: "
+          f"{tcfg.epochs} epoch(s) x {tcfg.waves_per_epoch} waves "
+          f"x batch {tcfg.wave_batch}")
+    trainer = TNNTrainer(cfg, tcfg, mesh=mesh)
+    print(trainer.run())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -39,9 +77,26 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--micro-steps", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    # default resolves per arch (LM and TNN runs must not share a dir —
+    # resume validates the checkpoint's config fingerprint)
+    ap.add_argument("--ckpt-dir", default=None)
+    # tnn-mnist options (DESIGN.md §9)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--sites", type=int, default=625,
+                    help="prototype sites (perfect square; --smoke -> 16)")
+    ap.add_argument("--impl", default="pallas",
+                    choices=("direct", "matmul", "pallas"))
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="waves between vote-table evals (0 = epoch ends)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="waves between checkpoints (0 = epoch ends)")
     args = ap.parse_args()
 
+    if args.arch == "tnn-mnist":
+        train_tnn(args)
+        return
+
+    args.ckpt_dir = args.ckpt_dir or "/tmp/repro_launch_ckpt"
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.production_mesh == "multi")

@@ -17,7 +17,10 @@ replicated; only images/results travel on the batch axis.
 
 The readout is the paper's unsupervised labelling: :meth:`TNNEngine.fit`
 runs one labelled pass to build the per-site vote table (DESIGN.md §1), and
-every served request is classified by the soft site vote.
+every served request is classified by the soft site vote. A trained
+deployment skips ``fit`` entirely: :meth:`TNNEngine.from_checkpoint`
+warm-starts weights AND vote table from a TNN training checkpoint
+(DESIGN.md §9), so serving picks up exactly where training left off.
 """
 from __future__ import annotations
 
@@ -101,6 +104,35 @@ class TNNEngine:
             ))
         self._classify = jax.jit(
             lambda z, vt: classify(z, vt, T, soft=True))
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        ckpt_dir: str,
+        cfg: NetworkConfig,
+        *,
+        step: Optional[int] = None,
+        n_slots: int = 8,
+        impl: str = "pallas",
+        mesh: Optional[Mesh] = None,
+    ) -> "TNNEngine":
+        """Warm-start serving from a TNN training checkpoint.
+
+        Restores the per-layer weights and — when the trainer has run a
+        labelling pass (``extra["has_vote"]``) — the vote table, so the
+        engine classifies immediately without a ``fit`` pass. ``step=None``
+        takes the latest checkpoint. The checkpoint carries no mesh info,
+        so the same files warm-start any serving mesh (DESIGN.md §9).
+        """
+        from repro.checkpoint.checkpointer import Checkpointer, restore_tnn
+        from repro.core.network import params_from_tree
+
+        state, extra = restore_tnn(Checkpointer(ckpt_dir), cfg, step)
+        eng = cls(cfg, params_from_tree(state["params"], cfg),
+                  n_slots=n_slots, impl=impl, mesh=mesh)
+        if extra.get("has_vote"):
+            eng.vote_table = state["vote_table"]
+        return eng
 
     # -- readout ----------------------------------------------------------
 

@@ -1,1 +1,4 @@
 # train subpackage
+from repro.train.tnn_trainer import TNNTrainConfig, TNNTrainer, WaveStream
+
+__all__ = ["TNNTrainConfig", "TNNTrainer", "WaveStream"]

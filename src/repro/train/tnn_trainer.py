@@ -1,0 +1,272 @@
+"""Streaming online-STDP trainer for the TNN prototype (DESIGN.md §9).
+
+The LM :class:`repro.train.trainer.Trainer` drives gradient steps; the TNN
+prototype learns *online* — STDP updates happen wave-by-wave, exactly as the
+silicon applies them — so its trainer drives gamma waves instead:
+
+* **wave batching** — each step is one jitted gamma wave over a fixed-shape
+  batch of encoded images through ``core.network.make_train_step`` (forward
+  + counter-form STDP, weight buffers donated). With a mesh the batch axis
+  is ``shard_map``-sharded over "data" like ``TNNEngine``; the counters are
+  psum'd, so the learned weights are device-count invariant.
+* **deterministic stream** — :class:`WaveStream` generates + encodes the
+  (reduced) training set once; ``batch_at(wave)`` is a pure function of the
+  wave counter, so resume-and-replay is exact (same contract as
+  ``data.tokens.TokenStream``).
+* **checkpointed resume** — the state pytree (weights, RNG key, wave
+  counter) plus the vote table goes through ``checkpoint.Checkpointer``;
+  ``maybe_resume`` restores it so train-N, save, restore, train-M produces
+  bit-identical weights to training N+M straight through, and
+  ``TNNEngine.from_checkpoint`` warm-starts serving without a ``fit`` pass.
+* **unsupervised eval cadence** — on ``eval_every`` waves (and at the end)
+  a labelled pass over the train set rebuilds the §1 vote-table readout and
+  scores held-out accuracy; waves/sec is tracked as the training-throughput
+  metric the benchmark-regression CI watches.
+
+Driver: ``python -m repro.launch.train --arch tnn-mnist [--smoke]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    restore_tnn,
+    tnn_config_fingerprint,
+)
+from repro.core.network import (
+    NetworkConfig,
+    build_vote_table,
+    classify,
+    encode_images,
+    init_train_state,
+    make_train_step,
+    network_forward,
+    params_from_tree,
+)
+from repro.data.mnist_like import digits
+
+
+@dataclasses.dataclass
+class TNNTrainConfig:
+    """Hyper-parameters for wave-batched online STDP training."""
+
+    epochs: int = 1
+    wave_batch: int = 16
+    train_size: int = 256          # images in the (generated) labelled set
+    eval_size: int = 128           # held-out images scored at eval points
+    eval_every: int = 0            # waves between evals; 0 = epoch ends only
+    ckpt_every: int = 0            # waves between checkpoints; 0 = epoch ends
+    ckpt_dir: str = "/tmp/repro_tnn_ckpt"
+    keep: int = 3
+    seed: int = 0                  # weights + STDP randomness
+    data_seed: int = 1             # train-set generator
+    eval_seed: int = 2             # held-out-set generator
+    log_every: int = 10
+    metrics_path: Optional[str] = None
+
+    @property
+    def waves_per_epoch(self) -> int:
+        return max(self.train_size // self.wave_batch, 1)
+
+    @property
+    def total_waves(self) -> int:
+        return self.epochs * self.waves_per_epoch
+
+
+class WaveStream:
+    """Deterministic wave-indexed stream of encoded spike batches.
+
+    Generates ``n`` MNIST-like digits once, center-crops them to the
+    config's field, and encodes them to (n, sites, p) int8 spike times up
+    front; ``batch_at(wave)`` slices ``wave_batch`` rows with wrap-around —
+    a pure function of the wave counter, which is what makes checkpoint
+    replay exact.
+    """
+
+    def __init__(self, cfg: NetworkConfig, n: int, wave_batch: int,
+                 seed: int = 1):
+        from repro.configs.tnn_mnist import crop_field
+
+        imgs, labels = digits(n, seed=seed)
+        imgs = crop_field(imgs, cfg.layers[0].n_cols)
+        self.images = imgs
+        self.labels = labels
+        self.x = np.asarray(encode_images(jnp.asarray(imgs), cfg))
+        self.n = n
+        self.wave_batch = wave_batch
+
+    def batch_at(self, wave: int) -> np.ndarray:
+        idx = (np.arange(self.wave_batch) + wave * self.wave_batch) % self.n
+        return self.x[idx]
+
+
+class TNNTrainer:
+    """Checkpointed, resumable, wave-batched STDP training loop.
+
+    The jitted step donates the state buffers, so only the returned state is
+    live; checkpoints materialize to host before the next wave launches.
+    Evaluation (vote-table labelling + held-out accuracy) runs unsharded —
+    it is a metrics pass, not the hot path.
+    """
+
+    def __init__(self, cfg: NetworkConfig, tcfg: TNNTrainConfig, mesh=None):
+        cfg.validate()
+        if mesh is not None:
+            ndata = int(mesh.shape.get("data", 1))
+            if tcfg.wave_batch % max(ndata, 1):
+                raise ValueError(
+                    f"wave_batch={tcfg.wave_batch} not divisible by data "
+                    f"axis size {ndata}")
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.step_fn = make_train_step(cfg, mesh=mesh)
+        self.state = init_train_state(jax.random.PRNGKey(tcfg.seed), cfg)
+        self.stream = WaveStream(cfg, tcfg.train_size, tcfg.wave_batch,
+                                 seed=tcfg.data_seed)
+        self.eval_stream = WaveStream(cfg, tcfg.eval_size, tcfg.wave_batch,
+                                      seed=tcfg.eval_seed)
+        last = cfg.layers[-1]
+        self.vote_table = jnp.zeros(
+            (last.n_cols, last.column.q, cfg.n_classes), jnp.float32)
+        self.has_vote = False
+        self._eval_wave = -1  # wave the vote table was last built at
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.accuracy: Optional[float] = None
+        self.wave_times: list = []
+        self._forward = jax.jit(
+            lambda ps, x: network_forward(x, ps, self.cfg)[-1])
+        self._metrics_f = (open(tcfg.metrics_path, "a")
+                           if tcfg.metrics_path else None)
+
+    # -- checkpointing -----------------------------------------------------
+
+    @property
+    def wave(self) -> int:
+        return int(self.state["wave"])
+
+    def _ckpt_state(self) -> Dict[str, Any]:
+        return dict(self.state, vote_table=self.vote_table)
+
+    def checkpoint(self, block: bool = False) -> None:
+        self.ckpt.save(
+            self.wave, self._ckpt_state(),
+            extra={"arch": "tnn-mnist",
+                   "config": tnn_config_fingerprint(self.cfg),
+                   "wave": self.wave, "has_vote": self.has_vote,
+                   "eval_wave": self._eval_wave,
+                   "accuracy": self.accuracy},
+            block=block)
+
+    def maybe_resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state, extra = restore_tnn(self.ckpt, self.cfg, latest)
+        self.vote_table = state.pop("vote_table")
+        self.state = state
+        self.has_vote = bool(extra.get("has_vote", False))
+        self._eval_wave = int(extra.get("eval_wave", -1))
+        self.accuracy = extra.get("accuracy")
+        return True
+
+    # -- readout / eval ----------------------------------------------------
+
+    def _forward_all(self, params, x: np.ndarray) -> jax.Array:
+        bs = self.tcfg.wave_batch
+        outs = []
+        for off in range(0, x.shape[0], bs):
+            chunk = x[off:off + bs]
+            k = chunk.shape[0]
+            if k < bs:
+                chunk = np.pad(chunk, ((0, bs - k), (0, 0), (0, 0)),
+                               constant_values=self.cfg.layers[0].column.wave.T)
+            outs.append(self._forward(params, jnp.asarray(chunk))[:k])
+        return jnp.concatenate(outs, axis=0)
+
+    def evaluate(self) -> float:
+        """Labelled pass over the train set -> vote table; score held-out
+        accuracy with the soft site vote (the paper's readout, §1)."""
+        T = self.cfg.layers[-1].column.wave.T
+        params = params_from_tree(self.state["params"], self.cfg)
+        z_train = self._forward_all(params, self.stream.x)
+        self.vote_table = build_vote_table(
+            z_train, jnp.asarray(self.stream.labels), self.cfg.n_classes, T)
+        self.has_vote = True
+        z_eval = self._forward_all(params, self.eval_stream.x)
+        preds = np.asarray(classify(z_eval, self.vote_table, T, soft=True))
+        self.accuracy = float((preds == self.eval_stream.labels).mean())
+        self._eval_wave = self.wave
+        return self.accuracy
+
+    # -- the loop ----------------------------------------------------------
+
+    def _log(self, rec: Dict[str, Any]) -> None:
+        if self._metrics_f:
+            self._metrics_f.write(json.dumps(rec) + "\n")
+            self._metrics_f.flush()
+        if (self.tcfg.log_every and rec["wave"] % self.tcfg.log_every == 0) \
+                or "accuracy" in rec:
+            print("[tnn-trainer] " +
+                  " ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                           for k, v in rec.items()))
+
+    def run(self) -> Dict[str, Any]:
+        resumed = self.maybe_resume()
+        if resumed:
+            print(f"[tnn-trainer] resumed at wave {self.wave} "
+                  f"from {self.tcfg.ckpt_dir}")
+        total = self.tcfg.total_waves
+        wpe = self.tcfg.waves_per_epoch
+        while self.wave < total:
+            wave = self.wave
+            x = jnp.asarray(self.stream.batch_at(wave))
+            t0 = time.perf_counter()
+            self.state, z = self.step_fn(self.state, x)
+            jax.block_until_ready(z)
+            dt = time.perf_counter() - t0
+            self.wave_times.append(dt)
+            wave += 1
+            rec = {"wave": wave, "dt_s": round(dt, 4),
+                   "waves_per_s": round(1.0 / max(dt, 1e-9), 3),
+                   "fired": round(float((np.asarray(z) <
+                                         self.cfg.layers[-1].column.wave.T)
+                                        .mean()), 4)}
+            at_epoch_end = wave % wpe == 0
+            if (self.tcfg.eval_every and wave % self.tcfg.eval_every == 0) or \
+                    (not self.tcfg.eval_every and at_epoch_end):
+                rec["accuracy"] = self.evaluate()
+            self._log(rec)
+            if (self.tcfg.ckpt_every and wave % self.tcfg.ckpt_every == 0) or \
+                    (not self.tcfg.ckpt_every and at_epoch_end):
+                self.checkpoint()
+        # the checkpointed vote table must match the final weights: re-label
+        # if any waves ran since the last eval (e.g. eval_every cadence not
+        # dividing total_waves), then skip the final save only when the
+        # in-loop cadence already wrote this exact state.
+        did_final_eval = False
+        if self._eval_wave != self.wave:
+            self.evaluate()
+            did_final_eval = True
+        self.ckpt.wait()
+        if did_final_eval or self.ckpt.latest_step() != self.wave:
+            self.checkpoint(block=True)
+            self.ckpt.wait()
+        if self._metrics_f:
+            self._metrics_f.close()
+        med = float(np.median(self.wave_times)) if self.wave_times else 0.0
+        return {
+            "final_wave": self.wave,
+            "epochs": self.wave // wpe,
+            "accuracy": self.accuracy,
+            "waves_per_s": (1.0 / med) if med else None,
+            "resumed": resumed,
+        }

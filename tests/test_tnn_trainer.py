@@ -1,0 +1,258 @@
+"""TNN training pipeline (DESIGN.md §9): counter-form train step parity
+with the reference wave, bit-exact checkpoint/resume, engine warm start,
+and device-count invariance of the sharded step (subprocess, like
+test_pipeline)."""
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, restore_tnn, tnn_abstract_state
+from repro.configs.tnn_mnist import crop_field, network_config, train_config
+from repro.core import (
+    init_network,
+    init_train_state,
+    make_train_step,
+    network_train_step,
+    network_train_wave,
+    params_from_tree,
+    params_to_tree,
+)
+from repro.data.mnist_like import digits
+from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+from repro.train.tnn_trainer import TNNTrainConfig, TNNTrainer, WaveStream
+
+SITES = 4  # tiny perfect-square geometry: 4+4 columns, 7x7 field
+
+
+def _cfg(impl="direct"):
+    return network_config(sites=SITES, theta1=6, theta2=2, impl=impl)
+
+
+def _rand_x(cfg, B=6, seed=3):
+    T = cfg.layers[0].column.wave.T
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (B, SITES, cfg.layers[0].column.p),
+        0, T + 1, dtype=jnp.int8)
+
+
+def _tcfg(tmp_path, **kw):
+    base = dict(wave_batch=4, train_size=16, eval_size=8,
+                ckpt_dir=str(tmp_path), log_every=1000)
+    base.update(kw)
+    return TNNTrainConfig(**base)
+
+
+def _assert_states_equal(a, b):
+    for k in a["params"]:
+        np.testing.assert_array_equal(np.asarray(a["params"][k]),
+                                      np.asarray(b["params"][k]))
+    np.testing.assert_array_equal(np.asarray(a["rng"]), np.asarray(b["rng"]))
+    assert int(a["wave"]) == int(b["wave"])
+
+
+def test_params_tree_roundtrip():
+    cfg = _cfg()
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    tree = params_to_tree(params)
+    assert sorted(tree) == ["layer_00", "layer_01"]
+    back = params_from_tree(tree, cfg)
+    for a, b in zip(params, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(KeyError):
+        params_from_tree({"layer_00": params[0]}, cfg)
+    with pytest.raises(ValueError):
+        params_from_tree(
+            {"layer_00": params[1], "layer_01": params[1]}, cfg)
+
+
+@pytest.mark.parametrize("impl", ["direct", "pallas"])
+def test_train_step_matches_reference_wave(impl):
+    """Counter-form step (net counters + one saturating apply) is bit-exact
+    with the applied update of network_train_wave, per backend."""
+    cfg = _cfg(impl)
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    x = _rand_x(cfg)
+    rng = jax.random.PRNGKey(7)
+    outs_a, params_a = network_train_wave(x, params, cfg, rng)
+    outs_b, params_b = network_train_step(x, params, cfg, rng)
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(params_a, params_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert b.dtype == jnp.int8
+
+
+def test_make_train_step_advances_state():
+    cfg = _cfg()
+    step = make_train_step(cfg, donate=False)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    state2, z = step(state, _rand_x(cfg))
+    assert int(state2["wave"]) == 1
+    assert z.shape == (6, SITES, cfg.layers[-1].column.q)
+    assert not np.array_equal(np.asarray(state["rng"]),
+                              np.asarray(state2["rng"]))
+
+
+def test_trainer_checkpoint_resume_bitexact(tmp_path):
+    """train N waves -> save -> restore -> train M waves == train N+M
+    straight through: weights, RNG key and wave counter all bit-exact."""
+    cfg = _cfg()
+    dir_a, dir_b = str(tmp_path / "straight"), str(tmp_path / "resumed")
+
+    # straight through: 2 epochs = 8 waves
+    tr_a = TNNTrainer(cfg, _tcfg(dir_a, epochs=2))
+    out_a = tr_a.run()
+    assert out_a["final_wave"] == 8 and not out_a["resumed"]
+
+    # N then M: 1 epoch, new trainer resumes for epoch 2
+    TNNTrainer(cfg, _tcfg(dir_b, epochs=1)).run()
+    tr_b2 = TNNTrainer(cfg, _tcfg(dir_b, epochs=2))
+    out_b = tr_b2.run()
+    assert out_b["final_wave"] == 8 and out_b["resumed"]
+
+    sa, ea = restore_tnn(Checkpointer(dir_a), cfg)
+    sb, eb = restore_tnn(Checkpointer(dir_b), cfg)
+    _assert_states_equal(sa, sb)
+    np.testing.assert_array_equal(np.asarray(sa["vote_table"]),
+                                  np.asarray(sb["vote_table"]))
+    assert ea["has_vote"] and eb["has_vote"]
+    assert out_a["accuracy"] == out_b["accuracy"]
+
+
+def test_engine_warm_start_matches_fit_engine(tmp_path):
+    """A TNNEngine restored from a training checkpoint classifies exactly
+    like the pre-save engine fit on the same labelled set."""
+    cfg = _cfg()
+    tr = TNNTrainer(cfg, _tcfg(str(tmp_path), epochs=1))
+    tr.run()
+
+    state, extra = restore_tnn(Checkpointer(str(tmp_path)), cfg)
+    assert extra["has_vote"]
+    eng_fit = TNNEngine(cfg, params_from_tree(state["params"], cfg),
+                        n_slots=4, impl="direct")
+    eng_fit.fit(tr.stream.images, tr.stream.labels)
+    eng_warm = TNNEngine.from_checkpoint(str(tmp_path), cfg, n_slots=4,
+                                         impl="direct")
+    np.testing.assert_allclose(np.asarray(eng_fit.vote_table),
+                               np.asarray(eng_warm.vote_table))
+
+    imgs, _ = digits(8, seed=11)
+    imgs = crop_field(imgs, SITES)
+    for eng in (eng_fit, eng_warm):
+        for uid in range(8):
+            eng.submit(ClassifyRequest(uid=uid, image=imgs[uid]))
+        eng.run_until_done()
+    assert ([eng_fit.done[u].result for u in range(8)] ==
+            [eng_warm.done[u].result for u in range(8)])
+
+
+def test_restore_refuses_foreign_or_mismatched_checkpoint(tmp_path):
+    """restore_tnn validates the checkpoint's config fingerprint before
+    loading arrays: an LM checkpoint or a TNN run with different
+    geometry/thresholds raises (for trainer resume AND engine warm start)
+    instead of crashing on leaf mismatch or silently serving a vote table
+    built under the wrong dynamics."""
+    cfg = _cfg()
+    # a foreign (LM-style) checkpoint in the directory
+    lm_dir = str(tmp_path / "lm")
+    Checkpointer(lm_dir, async_save=False).save(
+        5, {"params": {"w": jnp.zeros((2, 2))}}, extra={"data_step": 5})
+    with pytest.raises(ValueError, match="fresh directory"):
+        TNNTrainer(cfg, _tcfg(lm_dir)).maybe_resume()
+
+    # a TNN checkpoint trained under different firing thresholds
+    tnn_dir = str(tmp_path / "tnn")
+    TNNTrainer(cfg, _tcfg(tnn_dir, epochs=1)).run()
+    other = network_config(sites=SITES, theta1=5, theta2=2)
+    with pytest.raises(ValueError, match="fresh directory"):
+        TNNTrainer(other, _tcfg(tnn_dir)).maybe_resume()
+    with pytest.raises(ValueError, match="fresh directory"):
+        TNNEngine.from_checkpoint(tnn_dir, other, impl="direct")
+
+
+def test_final_checkpoint_vote_table_is_fresh(tmp_path):
+    """When the eval cadence doesn't divide total waves, run() must
+    re-label before the final save so the checkpointed vote table matches
+    the final weights (warm-started engines rely on this)."""
+    cfg = _cfg()
+    tr = TNNTrainer(cfg, _tcfg(str(tmp_path), epochs=2, eval_every=3))
+    out = tr.run()
+    assert out["final_wave"] == 8
+    _, extra = restore_tnn(Checkpointer(str(tmp_path)), cfg)
+    assert extra["has_vote"]
+    assert extra["eval_wave"] == extra["wave"] == 8
+
+
+def test_wave_stream_deterministic_and_wraps():
+    cfg = _cfg()
+    s1 = WaveStream(cfg, n=10, wave_batch=4, seed=1)
+    s2 = WaveStream(cfg, n=10, wave_batch=4, seed=1)
+    np.testing.assert_array_equal(s1.batch_at(3), s2.batch_at(3))
+    # wrap-around stays in range and deterministic
+    np.testing.assert_array_equal(s1.batch_at(7), s1.batch_at(7))
+    assert s1.batch_at(0).shape == (4, SITES, cfg.layers[0].column.p)
+
+
+def test_tnn_abstract_state_shapes():
+    cfg = _cfg()
+    ab = tnn_abstract_state(cfg)
+    assert ab["params"]["layer_00"].shape == (SITES, 32, 12)
+    assert ab["params"]["layer_01"].shape == (SITES, 12, 10)
+    assert ab["vote_table"].shape == (SITES, 10, 10)
+    assert ab["rng"].shape == (2,)
+
+
+def test_train_config_smoke_defaults():
+    t = train_config(sites=16, smoke=True, epochs=3)
+    assert t.epochs == 3 and t.train_size < 512
+    full = train_config()
+    assert full.train_size == 512 and full.wave_batch == 16
+
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.tnn_mnist import network_config
+    from repro.core import init_train_state, make_train_step
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = network_config(sites=4, theta1=6, theta2=2, impl="direct")
+    T = cfg.layers[0].column.wave.T
+    x = jax.random.randint(jax.random.PRNGKey(3), (8, 4, 32), 0, T + 1,
+                           dtype=jnp.int8)
+
+    step_un = make_train_step(cfg, donate=False)
+    st_a, za = step_un(init_train_state(jax.random.PRNGKey(0), cfg), x)
+
+    mesh = make_host_mesh()
+    assert mesh.shape["data"] == 4, mesh.shape
+    step_sh = make_train_step(cfg, mesh=mesh, donate=False)
+    st_b, zb = step_sh(init_train_state(jax.random.PRNGKey(0), cfg), x)
+
+    for k in st_a["params"]:
+        np.testing.assert_array_equal(np.asarray(st_a["params"][k]),
+                                      np.asarray(st_b["params"][k]))
+    np.testing.assert_array_equal(np.asarray(za), np.asarray(zb))
+    print("sharded == unsharded OK")
+""")
+
+
+def test_sharded_train_step_matches_unsharded_subprocess():
+    """4-way data-sharded training produces the same bits as unsharded —
+    the global-uniform-draw + counter-psum design of DESIGN.md §9."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "sharded == unsharded OK" in r.stdout

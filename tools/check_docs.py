@@ -1,15 +1,23 @@
 #!/usr/bin/env python
-"""Fail if any ``DESIGN.md §N`` reference in the source tree is dangling.
+"""Fail if the docs drift from the code they describe.
 
-Docstrings cite the architecture reference by section number; this keeps
-those citations honest: every ``DESIGN.md §N`` occurring under ``src/``
-(and, for good measure, ``tests/``, ``examples/``, ``benchmarks/``) must
-match a ``## §N — ...`` heading in DESIGN.md. Run from the repo root:
+Two checks, both run by CI next to the tier-1 pytest run:
+
+1. **DESIGN.md §N references.** Docstrings cite the architecture reference
+   by section number; every ``DESIGN.md §N`` occurring under ``src/`` (and,
+   for good measure, ``tests/``, ``examples/``, ``benchmarks/``) must match
+   a ``## §N — ...`` heading in DESIGN.md.
+2. **README backend matrix.** The "Execution backends" table in README.md
+   documents ``ColumnConfig.impl`` values; every backend a table row names
+   must be one ``ColumnConfig.IMPLS`` actually accepts (parsed from
+   ``src/repro/core/column.py`` — no jax import needed).
+
+Run from the repo root:
 
     python tools/check_docs.py
 
-Exit status 0 = all references resolve; 1 = dangling references (listed).
-Used by CI next to the tier-1 pytest run.
+Exit status 0 = everything resolves; 1 = dangling references or unknown
+backend rows (listed).
 """
 from __future__ import annotations
 
@@ -20,6 +28,53 @@ import sys
 REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
 SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
 SCAN_DIRS = ("src", "tests", "examples", "benchmarks")
+IMPLS_RE = re.compile(r"IMPLS\s*=\s*\(([^)]*)\)")
+
+
+def _column_impls(root: pathlib.Path) -> set:
+    """The backends ``ColumnConfig`` accepts, parsed from source (so this
+    script stays importable without jax installed)."""
+    src = (root / "src" / "repro" / "core" / "column.py").read_text()
+    m = IMPLS_RE.search(src)
+    if not m:
+        raise RuntimeError("could not find ColumnConfig.IMPLS in core/column.py")
+    return set(re.findall(r'"([^"]+)"', m.group(1)))
+
+
+def check_readme_backends(root: pathlib.Path) -> list:
+    """README backend-matrix rows must name impls ColumnConfig accepts.
+
+    A "backend matrix" is any README.md table whose header's first cell
+    contains the word "backend"; each data row's first cell is expected to
+    be a backticked impl name.
+    """
+    impls = _column_impls(root)
+    problems = []
+    in_backend_table = False
+    for lineno, line in enumerate(
+            (root / "README.md").read_text().splitlines(), 1):
+        stripped = line.strip()
+        if not stripped.startswith("|"):
+            in_backend_table = False
+            continue
+        cells = [c.strip() for c in stripped.strip("|").split("|")]
+        if not cells:
+            continue
+        first = cells[0]
+        if set(first) <= {"-", ":", " "}:  # separator row
+            continue
+        if "backend" in first.lower():
+            in_backend_table = True
+            continue
+        if not in_backend_table:
+            continue
+        m = re.match(r"`([^`]+)`", first)
+        name = m.group(1) if m else first
+        if name not in impls:
+            problems.append(
+                f"README.md:{lineno}: backend-matrix row names impl "
+                f"{name!r}, but ColumnConfig accepts {sorted(impls)}")
+    return problems
 
 
 def main() -> int:
@@ -44,13 +99,21 @@ def main() -> int:
                             f"{path.relative_to(root)}:{lineno}: "
                             f"DESIGN.md §{sec} (have: {sorted(sections)})")
 
-    if dangling:
-        print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
-        for d in dangling:
-            print(f"  {d}", file=sys.stderr)
+    backend_problems = check_readme_backends(root)
+
+    if dangling or backend_problems:
+        if dangling:
+            print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
+            for d in dangling:
+                print(f"  {d}", file=sys.stderr)
+        if backend_problems:
+            print("check_docs: README backend-matrix problems:", file=sys.stderr)
+            for p in backend_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
-          f"all resolve into {len(sections)} sections")
+          f"all resolve into {len(sections)} sections; README backend matrix "
+          f"names only accepted impls")
     return 0
 
 
