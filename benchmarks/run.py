@@ -14,7 +14,10 @@ human-readable tables. Paper benchmarks:
 System benches (this framework beyond the paper):
 
   column_throughput     — images/s through the jitted fused TNN column step.
-  tnn_wave_throughput   — reference-vs-pallas per-gamma-wave timing.
+  tnn_wave_throughput   — direct vs pallas vs fused per-gamma-wave timing,
+                          plus the kernel-launch count each backend issues
+                          per wave (the fused wave executor's 4 -> 1
+                          collapse, DESIGN.md §10).
   tnn_train_throughput  — waves/sec through the jitted online-STDP train
                           step (DESIGN.md §9) + the hwmodel PPA priced for
                           the trained network's actual (p, q) structure.
@@ -24,7 +27,9 @@ System benches (this framework beyond the paper):
 Flags: ``--smoke`` shrinks every section for CI wall-clock; ``--json PATH``
 writes the structured rows for artifact upload and regression checking
 (``benchmarks/check_regression.py`` compares waves/sec against the
-committed ``benchmarks/baseline.json``).
+committed ``benchmarks/baseline.json``); ``--impl`` restricts the TNN
+wave/train benches to one backend (the CI bench job uploads both the
+default all-backend artifact and an ``--impl fused`` one).
 """
 from __future__ import annotations
 
@@ -59,6 +64,35 @@ def _timeit(fn: Callable, n: int = 5) -> float:
     for _ in range(n):
         fn()
     return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def _pallas_launch_count(fn: Callable, *args) -> int:
+    """Count ``pallas_call`` equations in ``fn``'s jaxpr (recursing through
+    pjit/scan/vmap sub-jaxprs) — the number of kernel launches one call
+    issues. vmapped/grid-extended calls count once: they ARE one launch.
+    This is the metric the fused wave executor moves: per-layer pallas runs
+    2 forward + 2 STDP launches per wave, impl="fused" runs ONE."""
+    import jax
+
+    def walk_param(v) -> int:
+        if isinstance(v, (list, tuple)):
+            return sum(walk_param(x) for x in v)
+        if hasattr(v, "jaxpr"):   # ClosedJaxpr
+            return walk(v.jaxpr)
+        if hasattr(v, "eqns"):    # Jaxpr
+            return walk(v)
+        return 0
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                n += walk_param(v)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
 # ---------------------------------------------------------------------------
@@ -132,13 +166,18 @@ def column_throughput(smoke: bool = False) -> None:
         _emit(f"column_forward_{p}x{q}", us, us_per_image=round(per_img, 3))
 
 
-def tnn_wave_throughput(smoke: bool = False) -> None:
-    """Reference vs fused-Pallas per-gamma-wave timing for the prototype.
+def tnn_wave_throughput(smoke: bool = False,
+                        impls: tuple = ("direct", "pallas", "fused")) -> None:
+    """Per-gamma-wave timing for the prototype: reference vs per-layer
+    pallas vs the single-launch fused wave executor, plus the kernel-launch
+    count each backend issues per wave (DESIGN.md §10: the fused path
+    collapses the per-layer 4-launch chain to 1).
 
     ``TNN_BENCH_SITES`` (perfect square, default 625 = the paper's full
-    geometry) shrinks the field for quick CPU runs — on CPU the Pallas path
-    runs in interpret mode, so the fused numbers are a correctness/overhead
-    check there; Mosaic-on-TPU is the performance target (DESIGN.md §6).
+    geometry) shrinks the field for quick CPU runs — on CPU the Pallas
+    paths run in interpret mode, so their timings are a correctness/overhead
+    check there; Mosaic-on-TPU is the performance target (DESIGN.md §6),
+    and on CPU the launch-count reduction is the meaningful fused metric.
     """
     import jax
     import jax.numpy as jnp
@@ -152,7 +191,7 @@ def tnn_wave_throughput(smoke: bool = False) -> None:
     side = image_side(sites)
     B = 8 if smoke else 32
     print(f"\n== prototype learning wave ({sites}+{sites} columns, batch {B}, "
-          f"reference vs pallas) ==")
+          f"{' vs '.join(impls)}) ==")
     cfg = prototype_config(sites=sites, theta1=20, theta2=6)
     params = init_network(jax.random.PRNGKey(0), cfg)
     imgs = jnp.asarray(np.random.default_rng(0).random((B, side, side)),
@@ -160,31 +199,43 @@ def tnn_wave_throughput(smoke: bool = False) -> None:
     x = encode_images(imgs, cfg)
     k = jax.random.PRNGKey(1)
     us_by_impl = {}
-    for impl in ("direct", "pallas"):
+    for impl in impls:
         icfg = with_impl(cfg, impl)
-        step = jax.jit(lambda xb, ps, kk: network_train_wave(xb, ps, icfg, kk))
+        wave = lambda xb, ps, kk: network_train_wave(xb, ps, icfg, kk)
+        launches = _pallas_launch_count(wave, x, params, k)
+        step = jax.jit(wave)
         us = _timeit(lambda: jax.block_until_ready(step(x, params, k)[1][0]), n=2)
         us_by_impl[impl] = us
         print(f"{impl:9s} train wave: {us/1e3:9.1f} ms/batch({B}) = "
-              f"{us/B:8.0f} us/image")
+              f"{us/B:8.0f} us/image  [{launches} kernel launch(es)/wave]")
         _emit(f"tnn_prototype_wave_{impl}", us,
               us_per_image=round(us / B, 1))
-    ratio = us_by_impl["direct"] / max(us_by_impl["pallas"], 1e-9)
-    print(f"pallas/reference speedup: {ratio:.2f}x on {jax.default_backend()} "
-          f"(silicon target: 19.15 ns/image @ 1.69 mW)")
-    _emit("tnn_prototype_wave_speedup", 0.0, x=round(ratio, 3))
+        _emit(f"tnn_wave_launches_{impl}", 0.0, n=launches)
+    if {"direct", "pallas"} <= set(us_by_impl):
+        ratio = us_by_impl["direct"] / max(us_by_impl["pallas"], 1e-9)
+        print(f"pallas/reference speedup: {ratio:.2f}x on "
+              f"{jax.default_backend()} "
+              f"(silicon target: 19.15 ns/image @ 1.69 mW)")
+        _emit("tnn_prototype_wave_speedup", 0.0, x=round(ratio, 3))
+    if {"pallas", "fused"} <= set(us_by_impl):
+        ratio = us_by_impl["pallas"] / max(us_by_impl["fused"], 1e-9)
+        print(f"fused/pallas per-wave speedup: {ratio:.2f}x on "
+              f"{jax.default_backend()} (4 launches -> 1)")
+        _emit("tnn_wave_fused_speedup", 0.0, x=round(ratio, 3))
 
 
-def tnn_train_throughput(smoke: bool = False) -> None:
+def tnn_train_throughput(smoke: bool = False,
+                         impls: tuple = ("direct", "pallas", "fused")) -> None:
     """Training throughput through the production online-STDP train step.
 
     Times the jitted ``core.network.make_train_step`` (forward + counter-
-    form STDP + saturating apply, DESIGN.md §9) for the reference and fused
-    Pallas backends and reports **waves/sec** — the metric the CI ``bench``
-    job regression-checks against ``benchmarks/baseline.json``. Then prints
-    the hwmodel PPA report priced for the trained network's ACTUAL
-    (n_cols, p, q) structure — what this exact network would cost in the
-    paper's 7nm silicon — rather than the fixed full-prototype geometry.
+    form STDP + saturating apply, DESIGN.md §9) for the reference, the
+    per-layer pallas and the single-launch fused-wave backends and reports
+    **waves/sec** — the metric the CI ``bench`` job regression-checks
+    against ``benchmarks/baseline.json``. Then prints the hwmodel PPA
+    report priced for the trained network's ACTUAL (n_cols, p, q)
+    structure — what this exact network would cost in the paper's 7nm
+    silicon — rather than the fixed full-prototype geometry.
     """
     import jax
     import jax.numpy as jnp
@@ -195,10 +246,10 @@ def tnn_train_throughput(smoke: bool = False) -> None:
     B = 8 if smoke else 16
     theta1, theta2 = default_thetas(sites)
     print(f"\n== online-STDP training throughput ({sites}+{sites} columns, "
-          f"batch {B}, reference vs pallas) ==")
+          f"batch {B}, {' vs '.join(impls)}) ==")
     wps: Dict[str, float] = {}
     cfg = None
-    for impl in ("direct", "pallas"):
+    for impl in impls:
         cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
                              impl=impl)
         # donate=False: the timing loop re-feeds the same state buffers.
@@ -216,10 +267,16 @@ def tnn_train_throughput(smoke: bool = False) -> None:
         _emit(f"tnn_train_wave_{impl}", us,
               waves_per_s=round(wps[impl], 3),
               images_per_s=round(B * wps[impl], 1))
-    ratio = wps["pallas"] / max(wps["direct"], 1e-12)
-    print(f"pallas/reference training speedup: {ratio:.2f}x "
-          f"on {jax.default_backend()}")
-    _emit("tnn_train_speedup", 0.0, x=round(ratio, 3))
+    if {"direct", "pallas"} <= set(wps):
+        ratio = wps["pallas"] / max(wps["direct"], 1e-12)
+        print(f"pallas/reference training speedup: {ratio:.2f}x "
+              f"on {jax.default_backend()}")
+        _emit("tnn_train_speedup", 0.0, x=round(ratio, 3))
+    if {"pallas", "fused"} <= set(wps):
+        ratio = wps["fused"] / max(wps["pallas"], 1e-12)
+        print(f"fused/pallas training speedup: {ratio:.2f}x "
+              f"on {jax.default_backend()}")
+        _emit("tnn_train_fused_speedup", 0.0, x=round(ratio, 3))
 
     layers = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
     print(f"hwmodel PPA for the trained network's actual structure {layers} "
@@ -289,15 +346,22 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured rows to PATH (CI artifact; "
                          "input to check_regression.py)")
+    ap.add_argument("--impl", default="all",
+                    choices=("direct", "matmul", "pallas", "fused", "all"),
+                    help="restrict the TNN wave/train benches to one "
+                         "backend ('all' = direct vs pallas vs fused — the "
+                         "comparison the committed baseline gates)")
     args = ap.parse_args()
+    impls = (("direct", "pallas", "fused") if args.impl == "all"
+             else (args.impl,))
 
     t0 = time.time()
     table1_columns()
     table2_prototype()
     macro_layouts()
     column_throughput(smoke=args.smoke)
-    tnn_wave_throughput(smoke=args.smoke)
-    tnn_train_throughput(smoke=args.smoke)
+    tnn_wave_throughput(smoke=args.smoke, impls=impls)
+    tnn_train_throughput(smoke=args.smoke, impls=impls)
     lm_step_micro(smoke=args.smoke)
     roofline_summary()
     print("\nname,us_per_call,derived")

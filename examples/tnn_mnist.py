@@ -34,8 +34,9 @@ def main():
     ap.add_argument("--theta1", type=int, default=12)
     ap.add_argument("--theta2", type=int, default=3)
     ap.add_argument("--impl", default="direct",
-                    choices=("direct", "matmul", "pallas"),
-                    help="execution backend (pallas = fused kernels)")
+                    choices=("direct", "matmul", "pallas", "fused"),
+                    help="execution backend (pallas = fused per-layer "
+                         "kernels; fused = one launch per wave)")
     args = ap.parse_args()
 
     cfg = with_impl(prototype_config(theta1=args.theta1, theta2=args.theta2),

@@ -4,8 +4,11 @@ prototype, 625 columns of 32x12 -> 625 columns of 12x10 (13,750 neurons,
 
 ``network_config(impl=...)`` selects the execution backend for the whole
 stack: "direct"/"matmul" are the reference vmap formulations, "pallas"
-routes every layer through the fused kernels in ``repro.kernels`` (the
-production path; see DESIGN.md §2 and the backend matrix in README.md).
+routes every layer through the fused kernels in ``repro.kernels``, and
+"fused" runs the whole 2-layer wave as ONE Pallas launch via
+``repro.kernels.tnn_wave`` — the prototype is exactly the topology the
+fused wave executor targets (see DESIGN.md §2, §10 and the backend matrix
+in README.md).
 
 Reduced ``sites`` (smoke tests / CPU serving) must be a perfect square
 S = s*s; the matching input field is then (s+3, s+3) pixels, since a k=4

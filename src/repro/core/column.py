@@ -44,15 +44,20 @@ class ColumnConfig:
     theta: int  # body-potential threshold
     wave: WaveSpec = WaveSpec()
     stdp: STDPConfig = STDPConfig()
-    # Execution backend for the column/layer hot path (all three are exactly
+    # Execution backend for the column/layer hot path (all four are exactly
     # equal — parity asserted in tests):
     #   "direct" — reference broadcast evaluation of the body potential
     #   "matmul" — MXU-native (i,k)-factorized einsum (DESIGN.md §2)
     #   "pallas" — the fused Pallas kernels in repro.kernels (forward+WTA and
     #              STDP in single launches; Mosaic on TPU, interpret on CPU)
+    #   "fused"  — the whole-network wave executor (repro.kernels.tnn_wave,
+    #              DESIGN.md §10): ONE Pallas launch per gamma wave for a
+    #              2-layer same-site network, inter-layer volley kept in
+    #              VMEM; networks outside that topology fall back to
+    #              per-layer "pallas" launches.
     impl: str = "direct"
 
-    IMPLS = ("direct", "matmul", "pallas")
+    IMPLS = ("direct", "matmul", "pallas", "fused")
 
     def validate(self) -> None:
         self.wave.validate()

@@ -8,6 +8,11 @@ Execution backend is selected by ``ColumnConfig.impl``: the two reference
 formulations ("direct"/"matmul") vmap per-column jnp code, while "pallas"
 routes the whole layer through the fused kernels in :mod:`repro.kernels`
 (one padded launch per layer, bit-exact with the reference — DESIGN.md §2).
+"fused" selects the whole-network single-launch wave executor, which is a
+NETWORK-level fusion (:mod:`repro.core.network` dispatches it); at layer
+granularity it is identical to "pallas" — that is also the fallback for
+networks outside the fused executor's 2-layer same-site topology
+(DESIGN.md §10).
 
 Also provides the receptive-field plumbing for the MNIST prototype: 4x4
 pixel patches x {on, off} polarity = 32 synapses per column, 25x25 = 625
@@ -56,7 +61,7 @@ def init_layer(rng: jax.Array, cfg: LayerConfig) -> jax.Array:
 def layer_forward(x: jax.Array, w: jax.Array, cfg: LayerConfig) -> jax.Array:
     """x: (B, n_cols, p) -> post-WTA spike times (B, n_cols, q)."""
     spec = cfg.column.wave
-    if cfg.column.impl == "pallas":
+    if cfg.column.impl in ("pallas", "fused"):
         z = _kops.layer_forward_fused(x, w, theta=cfg.column.theta, T=spec.T)
         return z.astype(jnp.int8)
     fwd = column_forward_matmul if cfg.column.impl == "matmul" else column_forward
@@ -66,6 +71,19 @@ def layer_forward(x: jax.Array, w: jax.Array, cfg: LayerConfig) -> jax.Array:
 
     # vmap over columns (axis 1 of x, axis 0 of w)
     return jax.vmap(one_col, in_axes=(1, 0), out_axes=1)(x, w)
+
+
+def layer_uniforms(key: jax.Array, cfg: LayerConfig, B: int) -> jax.Array:
+    """One wave's STDP uniforms for a whole layer: (n_cols, 2, B, p, q),
+    drawn from the per-column key split EVERY backend uses — the per-layer
+    vmap path, the layer-level pallas kernels and the whole-network fused
+    wave executor all consume these exact draws (u[:, 0] = up, u[:, 1] =
+    down), which is what makes their updates bit-identical."""
+    p, q = cfg.column.p, cfg.column.q
+    col_keys = jax.random.split(key, cfg.n_cols)
+    return jax.vmap(
+        lambda kk: jax.random.uniform(kk, (2, B, p, q), dtype=jnp.float32)
+    )(col_keys)
 
 
 def layer_step(
@@ -82,18 +100,14 @@ def layer_step(
             raise ValueError("learning requires rng")
         keys = jax.random.split(rng, cfg.n_cols)
         spec, stdp = cfg.column.wave, cfg.column.stdp
-        if cfg.column.impl == "pallas" and stdp.batch_reduce == "sum":
-            # Fused layer-level STDP. The uniforms are drawn per column from
-            # the SAME per-column key split and with the SAME (2, B, p, q)
-            # shape as the reference stdp_update, so the Bernoulli compares
-            # see identical bits -> the update is bit-exact with the vmap
-            # path ("seq"/"gauss" reduce modes keep the reference path; the
+        if cfg.column.impl in ("pallas", "fused") and stdp.batch_reduce == "sum":
+            # Fused layer-level STDP. The uniforms come from layer_uniforms
+            # — the SAME per-column key split and (2, B, p, q) shape as the
+            # reference stdp_update, so the Bernoulli compares see identical
+            # bits -> the update is bit-exact with the vmap path
+            # ("seq"/"gauss" reduce modes keep the reference path; the
             # fused kernel implements the batched-sum counters).
-            B = x.shape[0]
-            u = jax.vmap(
-                lambda k: jax.random.uniform(
-                    k, (2, B, cfg.column.p, cfg.column.q), dtype=jnp.float32)
-            )(keys)  # (n_cols, 2, B, p, q)
+            u = layer_uniforms(rng, cfg, x.shape[0])  # (n_cols, 2, B, p, q)
             w = _kops.layer_stdp_fused(
                 w, x, z, u[:, 0], u[:, 1],
                 T=spec.T, w_max=spec.w_max, table=stdp.table_tuple(spec),
@@ -134,7 +148,7 @@ def layer_stdp_net(
             f"counter-form STDP requires batch_reduce='sum', got "
             f"{stdp.batch_reduce!r} ('seq'/'gauss' do not decompose into "
             f"shard-additive counters)")
-    if cfg.column.impl == "pallas":
+    if cfg.column.impl in ("pallas", "fused"):
         return _kops.layer_stdp_fused(
             w, x, z, u_up, u_dn,
             T=spec.T, w_max=spec.w_max, table=stdp.table_tuple(spec),

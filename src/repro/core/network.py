@@ -22,9 +22,12 @@ from repro.core.layer import (
     layer_forward,
     layer_stdp_net,
     layer_step,
+    layer_uniforms,
 )
 from repro.core.stdp import STDPConfig, apply_net
 from repro.core.temporal import WaveSpec
+from repro.kernels import padding as _kpad
+from repro.kernels import tnn_wave as _ktw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +64,15 @@ def prototype_config(
 
 
 def with_impl(cfg: NetworkConfig, impl: str) -> NetworkConfig:
-    """Rebind every layer's execution backend ("direct"/"matmul"/"pallas").
+    """Rebind every layer's execution backend
+    ("direct"/"matmul"/"pallas"/"fused").
 
     Params and semantics are backend-invariant, so the same weights can be
     trained on one backend and served on another; this is the single switch
     examples/benchmarks/serving flip to route the whole network through
-    ``repro.kernels.ops``.
+    ``repro.kernels``. "fused" selects the whole-network single-launch wave
+    executor when the topology allows it (DESIGN.md §10) and degrades to
+    per-layer "pallas" launches otherwise.
     """
     layers = tuple(
         dataclasses.replace(l, column=dataclasses.replace(l.column, impl=impl))
@@ -113,10 +119,30 @@ def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
     return out.astype(jnp.int8)
 
 
+def _uses_fused_wave(cfg: NetworkConfig) -> bool:
+    """True when the network should run as ONE megakernel launch per gamma
+    wave: every layer selects ``impl="fused"`` AND the topology matches the
+    executor (2 same-site layers, shared wave spec — DESIGN.md §10).
+    Fused-but-incapable networks fall through to the per-layer path, where
+    each "fused" layer executes as a "pallas" launch."""
+    return (all(l.column.impl == "fused" for l in cfg.layers)
+            and _kpad.fused_wave_capable(cfg))
+
+
+def _fused_stdp_ready(cfg: NetworkConfig) -> bool:
+    """The wave executor's STDP epilogue implements the batched-sum counter
+    form only; "seq"/"gauss" reduce modes keep the per-layer path."""
+    return all(l.column.stdp.batch_reduce == "sum" for l in cfg.layers)
+
+
 def network_forward(
     x: jax.Array, params: Sequence[jax.Array], cfg: NetworkConfig
 ) -> List[jax.Array]:
     """Run all layers; returns per-layer post-WTA spike times."""
+    if _uses_fused_wave(cfg):
+        plan = _kpad.network_plan(cfg, x.shape[0])
+        z1, z2 = _ktw.wave_forward(x, params[0], params[1], plan=plan)
+        return [z1.astype(jnp.int8), z2.astype(jnp.int8)]
     outs = []
     for w, lcfg in zip(params, cfg.layers):
         x = layer_forward(x, w, lcfg)
@@ -131,8 +157,21 @@ def network_train_wave(
     rng: jax.Array,
 ) -> Tuple[List[jax.Array], List[jax.Array]]:
     """One unsupervised gamma wave through the whole network (all layers learn)."""
-    new_params, outs = [], []
     keys = jax.random.split(rng, len(cfg.layers))
+    if _uses_fused_wave(cfg) and _fused_stdp_ready(cfg):
+        B = x.shape[0]
+        plan = _kpad.network_plan(cfg, B)
+        u1 = layer_uniforms(keys[0], cfg.layers[0], B)
+        u2 = layer_uniforms(keys[1], cfg.layers[1], B)
+        z1, z2, net1, net2 = _ktw.wave_train(
+            x, params[0], params[1], u1[:, 0], u1[:, 1], u2[:, 0], u2[:, 1],
+            plan=plan)
+        return (
+            [z1.astype(jnp.int8), z2.astype(jnp.int8)],
+            [apply_net(params[0], net1, cfg.layers[0].column.wave),
+             apply_net(params[1], net2, cfg.layers[1].column.wave)],
+        )
+    new_params, outs = [], []
     for w, lcfg, k in zip(params, cfg.layers, keys):
         x, w = layer_step(x, w, lcfg, k, learn=True)
         new_params.append(w)
@@ -195,14 +234,31 @@ def network_train_step(
     B = b_local * data_shards
     row0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * b_local
     keys = jax.random.split(rng, len(cfg.layers))
+    if _uses_fused_wave(cfg) and _fused_stdp_ready(cfg):
+        # One megakernel launch for the whole wave (DESIGN.md §10). The
+        # uniforms are still drawn for the GLOBAL batch from the same
+        # per-layer/per-column key split and sliced per shard, and the
+        # counters still psum — bits identical to the per-layer path.
+        plan = _kpad.network_plan(cfg, b_local)
+        us = []
+        for lcfg, k in zip(cfg.layers, keys):
+            u = layer_uniforms(k, lcfg, B)
+            us.append(jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2))
+        z1, z2, net1, net2 = _ktw.wave_train(
+            x, params[0], params[1],
+            us[0][:, 0], us[0][:, 1], us[1][:, 0], us[1][:, 1], plan=plan)
+        if axis_name is not None:
+            net1 = jax.lax.psum(net1, axis_name)
+            net2 = jax.lax.psum(net2, axis_name)
+        return (
+            [z1.astype(jnp.int8), z2.astype(jnp.int8)],
+            [apply_net(params[0], net1, cfg.layers[0].column.wave),
+             apply_net(params[1], net2, cfg.layers[1].column.wave)],
+        )
     new_params, outs = [], []
     for w, lcfg, k in zip(params, cfg.layers, keys):
         z = layer_forward(x, w, lcfg)
-        p, q = lcfg.column.p, lcfg.column.q
-        col_keys = jax.random.split(k, lcfg.n_cols)
-        u = jax.vmap(
-            lambda kk: jax.random.uniform(kk, (2, B, p, q), dtype=jnp.float32)
-        )(col_keys)  # (C, 2, B, p, q) — the global batch's draws
+        u = layer_uniforms(k, lcfg, B)  # (C, 2, B, p, q) — global draws
         u = jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2)
         net = layer_stdp_net(x, z, w, lcfg, u[:, 0], u[:, 1])
         if axis_name is not None:

@@ -6,16 +6,9 @@ here make them safe for arbitrary shapes and both execution targets:
 
 * **Padding semantics** (DESIGN.md §6). Batch rows and synapse rows are
   padded up to block multiples before the kernel launch and sliced away
-  after. Padded entries are encoded so they are algebraic no-ops:
-
-  - padded *input spike times* are set to ``T`` ("no spike"): an RNL ramp
-    that never starts contributes 0 to every body potential, and the STDP
-    case generator classifies an (x=T, z=T) pair as "none" (no update);
-  - padded *weight rows* are set to 0: a zero-weight synapse saturates its
-    ramp at 0, again contributing nothing, and the padded rows of the STDP
-    output are sliced off before anything reads them;
-  - padded *STDP uniforms* are set to 1.0: a Bernoulli draw ``u < p`` with
-    ``u = 1.0`` never fires, so padded batch rows cannot perturb counters.
+  after. The geometry AND the no-op pad encodings (spikes=T, weight rows=0,
+  uniforms=1.0) live in one place — :class:`repro.kernels.padding.PadPlan` —
+  instead of being recomputed ad hoc in every wrapper.
 
 * **``interpret`` auto-fallback** (DESIGN.md §8). Every wrapper takes
   ``interpret: bool | None``. ``None`` (the default) resolves to
@@ -45,7 +38,9 @@ Usage — fused forward + learning for one layer (CPU or TPU)::
                               table=default_stabilize_table(7))
 
 In the core model the same path is selected declaratively with
-``ColumnConfig(impl="pallas")`` — see :mod:`repro.core.layer`.
+``ColumnConfig(impl="pallas")`` — see :mod:`repro.core.layer`. The
+whole-network single-launch wave executor (``impl="fused"``) lives in
+:mod:`repro.kernels.tnn_wave` (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -54,30 +49,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.padding import PadPlan
 from repro.kernels.stdp_update import stdp_update_pallas
 from repro.kernels.tnn_column import column_forward_pallas
 from repro.kernels.wta import wta_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(n: int, m: int) -> int:
-    return (n + m - 1) // m * m
-
-
-def _launch_geom(B: int, p: int, block_b: int, block_p: int,
-                 interpret: bool | None):
-    """One place for the launch prologue every wrapper shares: clamp block
-    sizes to the (8-aligned) problem extents, compute the padded extents,
-    and resolve the interpret auto-fallback (DESIGN.md §6, §8). Returns
-    (block_b, block_p, padded_B, padded_p, interpret)."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    block_b = min(block_b, _pad_to(B, 8))
-    block_p = min(block_p, _pad_to(p, 8))
-    return block_b, block_p, _pad_to(B, block_b), _pad_to(p, block_p), interpret
 
 
 def column_forward(
@@ -94,29 +69,24 @@ def column_forward(
     """Fused column forward (+ optional WTA). x: (B, p), w: (p, q) -> (B, q) i32."""
     B, p = x.shape
     q = w.shape[1]
-    block_b, block_p, Bp, pp, interpret = _launch_geom(
-        B, p, block_b, block_p, interpret)
-    qp = q
-    if (Bp, pp) != (B, p):
-        x = jnp.pad(x, ((0, Bp - B), (0, pp - p)), constant_values=T)  # no-spike
-        w = jnp.pad(w, ((0, pp - p), (0, 0)))  # zero weight -> zero response
+    plan = PadPlan.make(B, p, block_b=block_b, block_p=block_p,
+                        interpret=interpret)
+    x = plan.pad_spikes(x, T, p_axis=1)
+    w = plan.pad_weights(w)
     z = column_forward_pallas(
         x, w, theta=theta, T=T, wta=wta,
-        block_b=block_b, block_p=block_p, interpret=interpret,
+        block_b=plan.block_b, block_p=plan.block_p, interpret=plan.interpret,
     )
-    return z[:B, :qp]
+    return z[:B, :q]
 
 
 def wta(z: jax.Array, *, T: int = 8, block_b: int = 128, interpret: bool | None = None) -> jax.Array:
     """Post-forward WTA inhibition. z: (B, q) -> (B, q) i32."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    B, q = z.shape
-    block_b = min(block_b, _pad_to(B, 8))
-    Bp = _pad_to(B, block_b)
-    if Bp != B:
-        z = jnp.pad(z, ((0, Bp - B), (0, 0)), constant_values=T)
-    return wta_pallas(z, T=T, block_b=block_b, interpret=interpret)[:B]
+    B = z.shape[0]
+    plan = PadPlan.make(B, block_b=block_b, interpret=interpret)
+    z = plan.pad_spikes(z, T)
+    return wta_pallas(z, T=T, block_b=plan.block_b,
+                      interpret=plan.interpret)[:B]
 
 
 def stdp_update(
@@ -140,22 +110,21 @@ def stdp_update(
     """Fused STDP wave update. Returns new (p, q) i32 weights, or the raw
     pre-clip (p, q) i32 net counters when ``out="net"`` (DESIGN.md §9)."""
     B, p = x.shape
-    q = z.shape[1]
-    block_b, block_p, Bp, pp, interpret = _launch_geom(
-        B, p, block_b, block_p, interpret)
-    if (Bp, pp) != (B, p):
-        # padded batch rows: x=T & z=T -> 'none' case -> no update;
-        # padded synapse rows are sliced away.
-        x = jnp.pad(x, ((0, Bp - B), (0, pp - p)), constant_values=T)
-        z = jnp.pad(z, ((0, Bp - B), (0, 0)), constant_values=T)
-        w = jnp.pad(w, ((0, pp - p), (0, 0)))
-        u_up = jnp.pad(u_up, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
-        u_dn = jnp.pad(u_dn, ((0, Bp - B), (0, pp - p), (0, 0)), constant_values=1.0)
+    plan = PadPlan.make(B, p, block_b=block_b, block_p=block_p,
+                        interpret=interpret)
+    # padded batch rows: x=T & z=T -> 'none' case -> no update; padded
+    # synapse rows carry u=1.0 and are sliced away.
+    x = plan.pad_spikes(x, T, p_axis=1)
+    z = plan.pad_spikes(z, T)
+    w = plan.pad_weights(w)
+    u_up = plan.pad_uniforms(u_up, p_axis=1)
+    u_dn = plan.pad_uniforms(u_dn, p_axis=1)
     res = stdp_update_pallas(
         w, x, z, u_up, u_dn,
         T=T, w_max=w_max, table=tuple(table),
         mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
-        block_p=block_p, block_b=block_b, interpret=interpret, out=out,
+        block_p=plan.block_p, block_b=plan.block_b, interpret=plan.interpret,
+        out=out,
     )
     return res[:p]
 
@@ -178,16 +147,14 @@ def layer_forward_fused(
     the column axis — the layer's spatial replication (Fig. 1) becomes a
     leading grid dimension of one kernel launch.
     """
-    B, C, p = x.shape
-    q = w.shape[2]
-    block_b, block_p, Bp, pp, interpret = _launch_geom(
-        B, p, block_b, block_p, interpret)
-    if (Bp, pp) != (B, p):
-        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, pp - p)), constant_values=T)
-        w = jnp.pad(w, ((0, 0), (0, pp - p), (0, 0)))
+    B, _, p = x.shape
+    plan = PadPlan.make(B, p, block_b=block_b, block_p=block_p,
+                        interpret=interpret)
+    x = plan.pad_spikes(x, T, p_axis=2)
+    w = plan.pad_weights(w, p_axis=1)
     f = functools.partial(
         column_forward_pallas, theta=theta, T=T, wta=wta,
-        block_b=block_b, block_p=block_p, interpret=interpret,
+        block_b=plan.block_b, block_p=plan.block_p, interpret=plan.interpret,
     )
     z = jax.vmap(f, in_axes=(1, 0), out_axes=1)(x, w)
     return z[:B]
@@ -223,23 +190,20 @@ def layer_stdp_fused(
     deltas instead of applied weights — the additive form the sharded train
     step psums over the mesh's "data" axis (DESIGN.md §9).
     """
-    B, C, p = x.shape
-    q = w.shape[2]
-    block_b, block_p, Bp, pp, interpret = _launch_geom(
-        B, p, block_b, block_p, interpret)
-    if (Bp, pp) != (B, p):
-        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, pp - p)), constant_values=T)
-        z = jnp.pad(z, ((0, Bp - B), (0, 0), (0, 0)), constant_values=T)
-        w = jnp.pad(w, ((0, 0), (0, pp - p), (0, 0)))
-        u_up = jnp.pad(u_up, ((0, 0), (0, Bp - B), (0, pp - p), (0, 0)),
-                       constant_values=1.0)
-        u_dn = jnp.pad(u_dn, ((0, 0), (0, Bp - B), (0, pp - p), (0, 0)),
-                       constant_values=1.0)
+    B, _, p = x.shape
+    plan = PadPlan.make(B, p, block_b=block_b, block_p=block_p,
+                        interpret=interpret)
+    x = plan.pad_spikes(x, T, p_axis=2)
+    z = plan.pad_spikes(z, T)
+    w = plan.pad_weights(w, p_axis=1)
+    u_up = plan.pad_uniforms(u_up, b_axis=1, p_axis=2)
+    u_dn = plan.pad_uniforms(u_dn, b_axis=1, p_axis=2)
     f = functools.partial(
         stdp_update_pallas,
         T=T, w_max=w_max, table=tuple(table),
         mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search,
-        block_p=block_p, block_b=block_b, interpret=interpret, out=out,
+        block_p=plan.block_p, block_b=plan.block_b, interpret=plan.interpret,
+        out=out,
     )
     res = jax.vmap(f, in_axes=(0, 1, 1, 0, 0))(w, x, z, u_up, u_dn)
     return res[:, :p]

@@ -1,0 +1,204 @@
+"""Launch geometry and padding plans for the Pallas TNN kernels.
+
+Every kernel wrapper in this package shares the same launch prologue: clamp
+the block sizes to the 8-aligned problem extents, pad the batch / synapse
+axes up to block multiples, launch, slice the padding away. Before this
+module the pad/slice boilerplate was copied (with per-layout axis tweaks)
+across ``column_forward`` / ``wta`` / ``stdp_update`` /
+``layer_forward_fused`` / ``layer_stdp_fused``; a :class:`PadPlan` computes
+the geometry ONCE and owns the no-op pad encodings (DESIGN.md §6):
+
+  - padded *spike times* are ``T`` ("no spike"): an RNL ramp that never
+    starts contributes 0 to every body potential, and the STDP case
+    generator classifies an (x=T, z=T) pair as "none" (no update);
+  - padded *weight rows* are 0: a zero-weight synapse saturates its ramp
+    at 0, and padded output rows are sliced off before anything reads them;
+  - padded *STDP uniforms* are 1.0: a Bernoulli compare ``u < p`` with
+    ``u = 1.0`` never fires, so padded batch rows cannot perturb counters.
+
+:func:`network_plan` lifts the same idea to the whole network for the fused
+wave executor (:mod:`repro.kernels.tnn_wave`, DESIGN.md §10): one
+:class:`NetworkPlan` per ``(NetworkConfig, batch)`` — computed once,
+lru-cached on the frozen config — carries the padded extents, block sizes
+and the static per-layer STDP constants the megakernel compiles against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to(n: int, m: int) -> int:
+    """Round ``n`` up to a multiple of ``m``."""
+    return (n + m - 1) // m * m
+
+
+def _pad_axis(arr: jax.Array, axis: int, amount: int, value) -> jax.Array:
+    if amount == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, amount)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+@dataclasses.dataclass(frozen=True)
+class PadPlan:
+    """One launch's geometry: logical extents, clamped blocks, padded
+    extents, resolved ``interpret`` flag. Frozen + hashable, so it can ride
+    through ``jax.jit`` as a static argument."""
+
+    b: int                 # logical batch rows
+    p: int                 # logical synapse rows (0 when the launch has none)
+    block_b: int
+    block_p: int
+    bp: int                # padded batch extent (multiple of block_b)
+    pp: int                # padded synapse extent (multiple of block_p)
+    interpret: bool
+
+    @classmethod
+    def make(
+        cls,
+        b: int,
+        p: Optional[int] = None,
+        *,
+        block_b: int = 64,
+        block_p: int = 256,
+        interpret: Optional[bool] = None,
+    ) -> "PadPlan":
+        """Clamp block sizes to the 8-aligned problem extents, compute the
+        padded extents, and resolve the interpret auto-fallback: ``None``
+        resolves to ``jax.default_backend() != "tpu"`` — Mosaic on a real
+        TPU, the (slow but bit-exact) interpreter everywhere else
+        (DESIGN.md §6, §8)."""
+        if interpret is None:
+            interpret = not _on_tpu()
+        block_b = min(block_b, pad_to(b, 8))
+        if p is None:
+            p = block_p = pp = 0
+        else:
+            block_p = min(block_p, pad_to(p, 8))
+            pp = pad_to(p, block_p)
+        return cls(b=b, p=p, block_b=block_b, block_p=block_p,
+                   bp=pad_to(b, block_b), pp=pp, interpret=interpret)
+
+    @property
+    def n_b(self) -> int:
+        """Batch-tile count of the launch grid."""
+        return self.bp // self.block_b
+
+    # -- the three no-op pad encodings -------------------------------------
+
+    def pad_spikes(self, x: jax.Array, T: int, *, b_axis: Optional[int] = 0,
+                   p_axis: Optional[int] = None) -> jax.Array:
+        """Pad spike-time rows with ``T`` (= "no spike") on the batch and/or
+        synapse axes."""
+        if b_axis is not None:
+            x = _pad_axis(x, b_axis, self.bp - self.b, T)
+        if p_axis is not None:
+            x = _pad_axis(x, p_axis, self.pp - self.p, T)
+        return x
+
+    def pad_weights(self, w: jax.Array, *, p_axis: int = 0) -> jax.Array:
+        """Pad weight rows with 0 (a zero-weight synapse is a no-op)."""
+        return _pad_axis(w, p_axis, self.pp - self.p, 0)
+
+    def pad_uniforms(self, u: jax.Array, *, b_axis: int = 0,
+                     p_axis: Optional[int] = None) -> jax.Array:
+        """Pad STDP uniforms with 1.0 (``u < p`` can never fire)."""
+        u = _pad_axis(u, b_axis, self.bp - self.b, 1.0)
+        if p_axis is not None:
+            u = _pad_axis(u, p_axis, self.pp - self.p, 1.0)
+        return u
+
+
+# ---------------------------------------------------------------------------
+# Network-level plan for the fused wave executor (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# The megakernel keeps each column's layer-1 synapse axis in ONE tile (the
+# whole wave runs without an inter-tile reduction), so padded p1 is capped.
+MAX_FUSED_P1 = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """Static compile plan for one fused gamma wave over a 2-layer same-site
+    network: padded extents + every per-layer constant the megakernel needs
+    as a compile-time value. Hashable — passed to ``jax.jit`` as static."""
+
+    n_cols: int
+    p1: int                # layer-1 fan-in (logical)
+    q1: int                # layer-1 neurons = layer-2 fan-in
+    q2: int                # layer-2 neurons
+    theta1: int
+    theta2: int
+    T: int
+    w_max: int
+    pad: PadPlan           # batch axis + layer-1 synapse axis
+    # static STDP constants per layer: stabilize table + (capture, backoff,
+    # search) rates — the Bernoulli side of the counter epilogue.
+    table1: Tuple[float, ...]
+    table2: Tuple[float, ...]
+    mus1: Tuple[float, float, float]
+    mus2: Tuple[float, float, float]
+
+
+def fused_wave_capable(cfg) -> bool:
+    """Whether ``cfg`` (a ``core.network.NetworkConfig``) matches the fused
+    wave executor's topology: exactly two same-site layers where layer 2's
+    fan-in is layer 1's neuron count, one shared wave spec, and extents the
+    single-tile megakernel can hold (q <= 128 lanes, padded p1 <=
+    ``MAX_FUSED_P1``). Networks outside this shape run ``impl="fused"``
+    as per-layer pallas launches instead (DESIGN.md §10)."""
+    if len(cfg.layers) != 2:
+        return False
+    l1, l2 = cfg.layers
+    return (
+        l1.n_cols == l2.n_cols
+        and l2.column.p == l1.column.q
+        and l1.column.wave == l2.column.wave
+        and l1.column.q <= 128
+        and l2.column.q <= 128
+        and pad_to(l1.column.p, 8) <= MAX_FUSED_P1
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def network_plan(cfg, batch: int, block_b: int = 64,
+                 interpret: Optional[bool] = None) -> NetworkPlan:
+    """Compute (once per (config, batch)) the fused wave's launch plan.
+
+    ``cfg`` is a frozen ``NetworkConfig`` — hashable, so the cache key is
+    the config itself; the plan replaces the per-stage padding recomputation
+    the per-layer path does on every kernel wrapper call."""
+    if not fused_wave_capable(cfg):
+        l_desc = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
+        raise ValueError(
+            f"network {l_desc} is not fused-wave capable: need exactly 2 "
+            f"same-site layers with l2.p == l1.q, a shared WaveSpec, "
+            f"q <= 128 and padded p1 <= {MAX_FUSED_P1}")
+    l1, l2 = cfg.layers
+    spec = l1.column.wave
+    pad = PadPlan.make(batch, l1.column.p, block_b=block_b,
+                       block_p=MAX_FUSED_P1, interpret=interpret)
+    return NetworkPlan(
+        n_cols=l1.n_cols,
+        p1=l1.column.p, q1=l1.column.q, q2=l2.column.q,
+        theta1=l1.column.theta, theta2=l2.column.theta,
+        T=spec.T, w_max=spec.w_max,
+        pad=pad,
+        table1=l1.column.stdp.table_tuple(spec),
+        table2=l2.column.stdp.table_tuple(spec),
+        mus1=(l1.column.stdp.mu_capture, l1.column.stdp.mu_backoff,
+              l1.column.stdp.mu_search),
+        mus2=(l2.column.stdp.mu_capture, l2.column.stdp.mu_backoff,
+              l2.column.stdp.mu_search),
+    )

@@ -24,6 +24,46 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def stdp_net_tile(
+    w: jax.Array, x: jax.Array, z: jax.Array, uu: jax.Array, ud: jax.Array,
+    *,
+    T: int,
+    w_max: int,
+    table: Sequence[float],
+    mu_capture: float,
+    mu_backoff: float,
+    mu_search: float,
+) -> jax.Array:
+    """One batch tile's pre-clip inc-dec counters: ``stdp_case_gen`` +
+    ``stabilize_func`` select chain + ``incdec`` Bernoulli compare.
+
+    w (Pt, q) i32; x (Bt, Pt) i32; z (Bt, q) i32; uu/ud (Bt, Pt, q) f32
+    -> (Pt, q) i32. Shared, parity-critical math: this per-layer kernel
+    accumulates it across batch tiles, and the fused wave kernel
+    (:mod:`repro.kernels.tnn_wave`) runs the same body once per layer
+    inside its epilogue — one source keeps every backend bit-identical.
+    """
+    xs = x[:, :, None]  # (Bt, Pt, 1)
+    zs = z[:, None, :]  # (Bt, 1, q)
+    x_fired = xs < T
+    z_fired = zs < T
+    capture = x_fired & z_fired & (xs <= zs)
+    backoff = (x_fired & z_fired & (xs > zs)) | (~x_fired & z_fired)
+    search = x_fired & ~z_fired
+
+    # stabilize_func: F[w] via select chain over the static table (the mux).
+    f = jnp.full(w.shape, table[0], dtype=jnp.float32)
+    for wv in range(1, w_max + 1):
+        f = jnp.where(w == wv, jnp.float32(table[wv]), f)
+    f = f[None, :, :]  # (1, Pt, q)
+
+    p_up = capture * (mu_capture * f) + search * jnp.float32(mu_search)
+    p_dn = backoff * (mu_backoff * f)
+    inc = (uu < p_up).astype(jnp.int32).sum(axis=0)  # (Pt, q)
+    dec = (ud < p_dn).astype(jnp.int32).sum(axis=0)
+    return inc - dec
+
+
 def _stdp_kernel(
     w_ref, x_ref, z_ref, uu_ref, ud_ref, out_ref, net_ref,
     *,
@@ -45,26 +85,10 @@ def _stdp_kernel(
     w = w_ref[...].astype(jnp.int32)  # (Pt, q)
     x = x_ref[...].astype(jnp.int32)  # (Bt, Pt)
     z = z_ref[...].astype(jnp.int32)  # (Bt, q)
-
-    xs = x[:, :, None]  # (Bt, Pt, 1)
-    zs = z[:, None, :]  # (Bt, 1, q)
-    x_fired = xs < T
-    z_fired = zs < T
-    capture = x_fired & z_fired & (xs <= zs)
-    backoff = (x_fired & z_fired & (xs > zs)) | (~x_fired & z_fired)
-    search = x_fired & ~z_fired
-
-    # stabilize_func: F[w] via select chain over the static table (the mux).
-    f = jnp.full(w.shape, table[0], dtype=jnp.float32)
-    for wv in range(1, w_max + 1):
-        f = jnp.where(w == wv, jnp.float32(table[wv]), f)
-    f = f[None, :, :]  # (1, Pt, q)
-
-    p_up = capture * (mu_capture * f) + search * jnp.float32(mu_search)
-    p_dn = backoff * (mu_backoff * f)
-    inc = (uu_ref[...] < p_up).astype(jnp.int32).sum(axis=0)  # (Pt, q)
-    dec = (ud_ref[...] < p_dn).astype(jnp.int32).sum(axis=0)
-    net_ref[...] += inc - dec
+    net_ref[...] += stdp_net_tile(
+        w, x, z, uu_ref[...], ud_ref[...],
+        T=T, w_max=w_max, table=table,
+        mu_capture=mu_capture, mu_backoff=mu_backoff, mu_search=mu_search)
 
     @pl.when(bt_idx == n_b_tiles - 1)
     def _apply():

@@ -33,13 +33,57 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def ramp_matmul(x: jax.Array, w: jax.Array, *, T: int) -> jax.Array:
+    """One tile's RNL body-potential contribution as the §2 A@N matmul.
+
+    x (Bt, Pt) i32 spike times; w (Pt, q) i32 weights -> (Bt*T, q) f32
+    partial potentials. Shared, parity-critical math: the per-layer column
+    kernel accumulates these across synapse tiles, the fused wave kernel
+    (:mod:`repro.kernels.tnn_wave`) consumes a single tile directly —
+    keeping ONE body keeps every backend bit-identical.
+    """
+    bt, p_tile = x.shape
+    q = w.shape[1]
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, p_tile, T), 2) + 1  # ramp step 1..T
+    t = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)  # wave position 0..T-1
+    # A[(b,t),(i,k)] = [x + k <= t]  — (Bt, Pt, T) vs t -> (Bt, T, Pt*T)
+    arrive = x[:, :, None] + k  # (Bt, Pt, T): earliest t this ramp step contributes
+    a = (arrive.reshape(bt, 1, p_tile * T) <= t[:, :, None]).astype(jnp.bfloat16)
+    # N[(i,k), j] = [k <= w]
+    n = (k.reshape(p_tile, T, 1) <= w[:, None, :]).astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        a.reshape(bt * T, p_tile * T),
+        n.reshape(p_tile * T, q),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Bt*T, q)
+
+
+def crossing_wta(V: jax.Array, *, T: int, theta: int, wta: bool) -> jax.Array:
+    """Threshold crossing + optional WTA from accumulated potentials.
+
+    V (Bt, T, q) f32 -> spike times (Bt, q) i32: first wave position with
+    V >= theta else T; under WTA the earliest spike wins, ties break to the
+    lowest index (the paper's systematic tie-break). Shared between the
+    column kernel and the fused wave kernel."""
+    bt, _, q = V.shape
+    crossed = V >= theta
+    tt = jax.lax.broadcasted_iota(jnp.int32, (bt, T, q), 1)
+    z = jnp.min(jnp.where(crossed, tt, T), axis=1)  # (Bt, q)
+    if wta:
+        qi = jax.lax.broadcasted_iota(jnp.int32, (bt, q), 1)
+        key = z * q + qi  # ties -> lowest index
+        winner = jnp.min(key, axis=1, keepdims=True)
+        z = jnp.where((key == winner) & (z < T), z, T)
+    return z
+
+
 def _column_kernel(
     x_ref, w_ref, z_ref, acc_ref, *, T: int, theta: int, n_p_tiles: int, wta: bool
 ):
     pt = pl.program_id(1)
 
     bt = x_ref.shape[0]
-    p_tile = x_ref.shape[1]
     q = w_ref.shape[1]
 
     @pl.when(pt == 0)
@@ -48,36 +92,12 @@ def _column_kernel(
 
     x = x_ref[...].astype(jnp.int32)  # (Bt, Pt)
     w = w_ref[...].astype(jnp.int32)  # (Pt, q)
-
-    k = jax.lax.broadcasted_iota(jnp.int32, (1, p_tile, T), 2) + 1  # ramp step 1..T
-    t = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)  # wave position 0..T-1
-
-    # A[(b,t),(i,k)] = [x + k <= t]  — (Bt, Pt, T) vs t -> (Bt, T, Pt*T)
-    arrive = x[:, :, None] + k  # (Bt, Pt, T): earliest t this ramp step contributes
-    a = (arrive.reshape(bt, 1, p_tile * T) <= t[:, :, None]).astype(jnp.bfloat16)
-    # N[(i,k), j] = [k <= w]
-    n = (k.reshape(p_tile, T, 1) <= w[:, None, :]).astype(jnp.bfloat16)
-
-    v = jax.lax.dot_general(
-        a.reshape(bt * T, p_tile * T),
-        n.reshape(p_tile * T, q),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (Bt*T, q)
-    acc_ref[...] += v
+    acc_ref[...] += ramp_matmul(x, w, T=T)
 
     @pl.when(pt == n_p_tiles - 1)
     def _finish():
-        V = acc_ref[...].reshape(bt, T, q)
-        crossed = V >= theta
-        tt = jax.lax.broadcasted_iota(jnp.int32, (bt, T, q), 1)
-        z = jnp.min(jnp.where(crossed, tt, T), axis=1)  # (Bt, q)
-        if wta:
-            qi = jax.lax.broadcasted_iota(jnp.int32, (bt, q), 1)
-            key = z * q + qi  # ties -> lowest index
-            winner = jnp.min(key, axis=1, keepdims=True)
-            z = jnp.where((key == winner) & (z < T), z, T)
-        z_ref[...] = z
+        z_ref[...] = crossing_wta(
+            acc_ref[...].reshape(bt, T, q), T=T, theta=theta, wta=wta)
 
 
 @functools.partial(

@@ -1,0 +1,222 @@
+"""Pallas TPU megakernel: one launch per gamma wave for the whole network.
+
+The paper's 7nm prototype processes a gamma wave as a single hardware
+pipeline — the layer-1 spike volley flows straight into the layer-2 columns
+without ever leaving the datapath. This kernel is the software analog
+(DESIGN.md §10): for each (column site, batch tile) grid cell it runs
+
+    layer-1 RNL accumulate + threshold + WTA        (the §2 A@N matmul)
+      -> inter-layer spike volley, held in VMEM/registers
+    layer-2 RNL accumulate + threshold + WTA
+      -> optional STDP-counter epilogue for BOTH layers
+
+so the intermediate ``(B, S, q1)`` volley never round-trips through HBM and
+the per-layer kernel chain (2 forward + 2 STDP ``pallas_call`` launches per
+wave) collapses to ONE launch. Same-site topology makes this embarrassingly
+column-parallel: site s of layer 2 reads only site s of layer 1, so the
+column axis is the leading grid dimension and no cross-site traffic exists.
+
+Grid: ``(n_cols, batch tiles)``; batch is the minor (sequential) dimension,
+so the per-column STDP counter scratch accumulates across batch tiles and
+the final tile emits the pre-clip ``out="net"`` counters — the additive
+form sharded training psums over the mesh's "data" axis before one
+saturating apply, exactly like the per-layer path (DESIGN.md §9).
+
+Layout: arrays arrive column-major — x ``(C, Bp, p1p)``, weights
+``(C, p, q)``, uniforms ``(C, Bp, p, q)`` — matching the per-column RNG
+split the reference path draws, so the Bernoulli compares see identical
+bits and the whole wave is bit-exact with ``impl="direct"``.
+
+Geometry comes from a precomputed :class:`repro.kernels.padding.NetworkPlan`
+(static, hashable, lru-cached per config): the layer-1 synapse axis lives in
+a single tile (padded p1 <= ``MAX_FUSED_P1``), q1/q2 stay un-tiled in lanes
+(<= 128), and padding follows the package's no-op encodings (spikes=T,
+weights=0, uniforms=1.0).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.padding import NetworkPlan
+from repro.kernels.stdp_update import stdp_net_tile
+from repro.kernels.tnn_column import crossing_wta, ramp_matmul
+
+
+def _rnl_wta(x: jax.Array, w: jax.Array, *, T: int, theta: int) -> jax.Array:
+    """One layer's forward for one (column, batch-tile) cell: the §2 A@N
+    0/1 matmul, threshold crossing, and WTA — x (Bt, P) i32, w (P, q) i32
+    -> post-WTA spike times (Bt, q) i32. The parity-critical math is the
+    SAME ``ramp_matmul``/``crossing_wta`` bodies the per-layer column
+    kernel runs; here the synapse axis is a single tile (the plan
+    guarantees P fits), so no cross-tile accumulator is needed."""
+    bt = x.shape[0]
+    q = w.shape[1]
+    v = ramp_matmul(x, w, T=T).reshape(bt, T, q)
+    return crossing_wta(v, T=T, theta=theta, wta=True)
+
+
+def _wave_kernel(
+    x_ref, w1_ref, w2_ref, *refs,
+    T: int, theta1: int, theta2: int, n_b_tiles: int, learn: bool,
+    w_max: int, table1, table2, mus1, mus2,
+):
+    if learn:
+        (u1u_ref, u1d_ref, u2u_ref, u2d_ref,
+         z1_ref, z2_ref, net1_ref, net2_ref,
+         net1_acc, net2_acc) = refs
+    else:
+        z1_ref, z2_ref = refs
+
+    x = x_ref[0].astype(jnp.int32)    # (Bt, p1p)
+    w1 = w1_ref[0].astype(jnp.int32)  # (p1p, q1)
+    w2 = w2_ref[0].astype(jnp.int32)  # (q1, q2)
+
+    # the whole wave, volley in registers/VMEM: no HBM round-trip between
+    # layers, no re-padding between stages.
+    z1 = _rnl_wta(x, w1, T=T, theta=theta1)   # (Bt, q1)
+    z2 = _rnl_wta(z1, w2, T=T, theta=theta2)  # (Bt, q2)
+    z1_ref[0] = z1
+    z2_ref[0] = z2
+
+    if learn:
+        bt_idx = pl.program_id(1)
+
+        @pl.when(bt_idx == 0)
+        def _init():
+            net1_acc[...] = jnp.zeros_like(net1_acc)
+            net2_acc[...] = jnp.zeros_like(net2_acc)
+
+        net1_acc[...] += stdp_net_tile(
+            w1, x, z1, u1u_ref[0], u1d_ref[0],
+            T=T, w_max=w_max, table=table1,
+            mu_capture=mus1[0], mu_backoff=mus1[1], mu_search=mus1[2])
+        net2_acc[...] += stdp_net_tile(
+            w2, z1, z2, u2u_ref[0], u2d_ref[0],
+            T=T, w_max=w_max, table=table2,
+            mu_capture=mus2[0], mu_backoff=mus2[1], mu_search=mus2[2])
+
+        @pl.when(bt_idx == n_b_tiles - 1)
+        def _emit():
+            net1_ref[0] = net1_acc[...]
+            net2_ref[0] = net2_acc[...]
+
+
+def _wave_pallas_call(plan: NetworkPlan, learn: bool):
+    """Build the single-launch pallas_call for one gamma wave under ``plan``."""
+    C, bt, p1p = plan.n_cols, plan.pad.block_b, plan.pad.pp
+    bp, n_b = plan.pad.bp, plan.pad.n_b
+    q1, q2 = plan.q1, plan.q2
+    in_specs = [
+        pl.BlockSpec((1, bt, p1p), lambda c, b: (c, b, 0)),   # x
+        pl.BlockSpec((1, p1p, q1), lambda c, b: (c, 0, 0)),   # w1
+        pl.BlockSpec((1, q1, q2), lambda c, b: (c, 0, 0)),    # w2
+    ]
+    out_specs = [
+        pl.BlockSpec((1, bt, q1), lambda c, b: (c, b, 0)),    # z1
+        pl.BlockSpec((1, bt, q2), lambda c, b: (c, b, 0)),    # z2
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((C, bp, q1), jnp.int32),
+        jax.ShapeDtypeStruct((C, bp, q2), jnp.int32),
+    ]
+    scratch = []
+    if learn:
+        in_specs += [
+            pl.BlockSpec((1, bt, p1p, q1), lambda c, b: (c, b, 0, 0)),  # u1_up
+            pl.BlockSpec((1, bt, p1p, q1), lambda c, b: (c, b, 0, 0)),  # u1_dn
+            pl.BlockSpec((1, bt, q1, q2), lambda c, b: (c, b, 0, 0)),   # u2_up
+            pl.BlockSpec((1, bt, q1, q2), lambda c, b: (c, b, 0, 0)),   # u2_dn
+        ]
+        out_specs += [
+            pl.BlockSpec((1, p1p, q1), lambda c, b: (c, 0, 0)),  # net1
+            pl.BlockSpec((1, q1, q2), lambda c, b: (c, 0, 0)),   # net2
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((C, p1p, q1), jnp.int32),
+            jax.ShapeDtypeStruct((C, q1, q2), jnp.int32),
+        ]
+        scratch = [
+            pltpu.VMEM((p1p, q1), jnp.int32),
+            pltpu.VMEM((q1, q2), jnp.int32),
+        ]
+    kernel = functools.partial(
+        _wave_kernel,
+        T=plan.T, theta1=plan.theta1, theta2=plan.theta2,
+        n_b_tiles=n_b, learn=learn, w_max=plan.w_max,
+        table1=plan.table1, table2=plan.table2,
+        mus1=plan.mus1, mus2=plan.mus2,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(C, n_b),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=plan.pad.interpret,
+    )
+
+
+def _prep_inputs(x, w1, w2, plan: NetworkPlan):
+    """Apply the plan's no-op pad encodings once and go column-major.
+    Inputs are widened to i32 before the launch — the same contract the
+    raw per-layer kernels use (int8 VMEM tiles are Mosaic-fragile)."""
+    pad = plan.pad
+    x = pad.pad_spikes(x, plan.T, b_axis=0, p_axis=2)       # (Bp, C, p1p)
+    xT = x.transpose(1, 0, 2).astype(jnp.int32)             # (C, Bp, p1p)
+    w1 = pad.pad_weights(w1, p_axis=1).astype(jnp.int32)    # (C, p1p, q1)
+    return xT, w1, w2.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def wave_forward(
+    x: jax.Array, w1: jax.Array, w2: jax.Array, *, plan: NetworkPlan
+) -> Tuple[jax.Array, jax.Array]:
+    """One fused forward gamma wave. x (B, C, p1) ints; w1 (C, p1, q1);
+    w2 (C, q1, q2). Returns post-WTA spike times (z1 (B, C, q1),
+    z2 (B, C, q2)) i32 — bit-exact with the per-layer backends."""
+    xT, w1, w2 = _prep_inputs(x, w1, w2, plan)
+    z1t, z2t = _wave_pallas_call(plan, learn=False)(xT, w1, w2)
+    B = plan.pad.b
+    return z1t.transpose(1, 0, 2)[:B], z2t.transpose(1, 0, 2)[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def wave_train(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    u1_up: jax.Array,
+    u1_dn: jax.Array,
+    u2_up: jax.Array,
+    u2_dn: jax.Array,
+    *,
+    plan: NetworkPlan,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused learning gamma wave: forward through both layers PLUS the
+    STDP-counter epilogue, one launch.
+
+    u*_up/u*_dn: (C, B, p, q) per-column uniforms — the same draws (same
+    per-layer/per-column key split) the reference path makes, passed in
+    explicitly so the update is a deterministic, oracle-checkable function.
+    Returns (z1, z2, net1, net2): post-WTA spike times per layer and the
+    PRE-CLIP batch-summed counter deltas (``out="net"`` semantics,
+    DESIGN.md §9) — deltas from disjoint batch shards sum (psum) before one
+    saturating ``apply_net``, so sharded training stays bit-identical."""
+    pad = plan.pad
+    xT, w1, w2 = _prep_inputs(x, w1, w2, plan)
+    u1_up = pad.pad_uniforms(u1_up, b_axis=1, p_axis=2)
+    u1_dn = pad.pad_uniforms(u1_dn, b_axis=1, p_axis=2)
+    u2_up = pad.pad_uniforms(u2_up, b_axis=1)
+    u2_dn = pad.pad_uniforms(u2_dn, b_axis=1)
+    z1t, z2t, net1, net2 = _wave_pallas_call(plan, learn=True)(
+        xT, w1, w2, u1_up, u1_dn, u2_up, u2_dn)
+    B, p1 = pad.b, pad.p
+    return (z1t.transpose(1, 0, 2)[:B], z2t.transpose(1, 0, 2)[:B],
+            net1[:, :p1], net2)

@@ -117,7 +117,9 @@ def main() -> None:
     # tnn-mnist options
     ap.add_argument("--sites", type=int, default=64)
     ap.add_argument("--impl", default="pallas",
-                    choices=("direct", "matmul", "pallas"))
+                    choices=("direct", "matmul", "pallas", "fused"),
+                    help="execution backend; 'fused' = one Pallas launch "
+                         "per gamma wave (DESIGN.md §10)")
     ap.add_argument("--train-waves", type=int, default=4)
     ap.add_argument("--from-ckpt", default=None, metavar="DIR",
                     help="warm-start from a TNN training checkpoint "

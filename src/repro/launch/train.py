@@ -85,7 +85,9 @@ def main() -> None:
     ap.add_argument("--sites", type=int, default=625,
                     help="prototype sites (perfect square; --smoke -> 16)")
     ap.add_argument("--impl", default="pallas",
-                    choices=("direct", "matmul", "pallas"))
+                    choices=("direct", "matmul", "pallas", "fused"),
+                    help="execution backend; 'fused' = one Pallas launch "
+                         "per gamma wave (DESIGN.md §10)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="waves between vote-table evals (0 = epoch ends)")
     ap.add_argument("--ckpt-every", type=int, default=0,

@@ -59,7 +59,9 @@ class TNNEngine:
         n_slots: concurrent images per jitted call (the fixed batch shape).
             Must be a multiple of the mesh's "data" axis size.
         impl: execution backend for serving ("pallas" routes every layer
-            through repro.kernels.ops; "direct"/"matmul" are the references).
+            through repro.kernels.ops; "fused" classifies each wave in ONE
+            megakernel launch via repro.kernels.tnn_wave, DESIGN.md §10;
+            "direct"/"matmul" are the references).
         mesh: optional ``Mesh`` with a "data" axis for data-parallel
             sharding of the slot axis; ``None`` serves unsharded.
     """

@@ -8,7 +8,10 @@ silicon applies them — so its trainer drives gamma waves instead:
   batch of encoded images through ``core.network.make_train_step`` (forward
   + counter-form STDP, weight buffers donated). With a mesh the batch axis
   is ``shard_map``-sharded over "data" like ``TNNEngine``; the counters are
-  psum'd, so the learned weights are device-count invariant.
+  psum'd, so the learned weights are device-count invariant. The network
+  config's ``impl`` picks the backend — ``impl="fused"`` collapses the
+  whole wave (both layers' forward + STDP counters) into ONE Pallas launch
+  (DESIGN.md §10) and trains bit-identically to every other backend.
 * **deterministic stream** — :class:`WaveStream` generates + encodes the
   (reduced) training set once; ``batch_at(wave)`` is a pure function of the
   wave counter, so resume-and-replay is exact (same contract as

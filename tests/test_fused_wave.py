@@ -1,0 +1,230 @@
+"""The whole-network fused wave executor (impl="fused", DESIGN.md §10):
+bit-exact parity with direct/matmul/pallas across a non-8-aligned shape
+grid (forward AND learned weights), single-launch dispatch assertions,
+topology fallback to the per-layer path, and the PadPlan/NetworkPlan
+geometry contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ColumnConfig,
+    LayerConfig,
+    NetworkConfig,
+    STDPConfig,
+    WaveSpec,
+    init_network,
+    network_forward,
+    network_train_step,
+    network_train_wave,
+    prototype_config,
+    with_impl,
+)
+from repro.kernels import padding, tnn_wave
+
+
+def _net(C, p1, q1, q2, T, theta1, theta2, impl="direct"):
+    """A 2-layer same-site network in the fused executor's topology."""
+    wave = WaveSpec(time_bits={8: 3, 16: 4}[T])
+    l1 = LayerConfig(C, ColumnConfig(p=p1, q=q1, theta=theta1, wave=wave))
+    l2 = LayerConfig(C, ColumnConfig(p=q1, q=q2, theta=theta2, wave=wave))
+    cfg = NetworkConfig(layers=(l1, l2))
+    return with_impl(cfg, impl)
+
+
+def _x(cfg, B, seed=1):
+    T = cfg.layers[0].column.wave.T
+    p1 = cfg.layers[0].column.p
+    C = cfg.layers[0].n_cols
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, C, p1),
+                              0, T + 1, jnp.int8)
+
+
+# nothing 8-aligned, odd batches, q < 12, both wave lengths, plus the
+# paper-prototype column shapes (reduced smoke site count)
+PARITY_GRID = [
+    (5, 3, 20, 6, 5, 8, 12, 3),     # nothing aligned to the 8-multiple blocks
+    (3, 2, 9, 4, 3, 16, 5, 2),      # tiny odd shapes, T=16
+    (16, 4, 32, 12, 10, 8, 24, 8),  # the prototype's column shapes
+    (1, 1, 7, 2, 2, 8, 3, 1),       # degenerate single-everything
+    (13, 3, 33, 11, 7, 16, 40, 4),  # prime-ish B/p1, odd batch, T=16
+]
+
+
+@pytest.mark.parametrize("B,C,p1,q1,q2,T,th1,th2", PARITY_GRID)
+def test_forward_parity(B, C, p1, q1, q2, T, th1, th2):
+    """network_forward under impl="fused" (one megakernel launch) is
+    bit-exact with every per-layer backend."""
+    ref = _net(C, p1, q1, q2, T, th1, th2)
+    params = init_network(jax.random.PRNGKey(p1 * q1 + B), ref)
+    x = _x(ref, B, seed=B + C)
+    zr = network_forward(x, params, ref)
+    for impl in ("matmul", "pallas", "fused"):
+        zi = network_forward(x, params, with_impl(ref, impl))
+        for a, b in zip(zr, zi):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert b.dtype == a.dtype  # backend must not leak a wider dtype
+
+
+@pytest.mark.parametrize("B,C,p1,q1,q2,T,th1,th2", PARITY_GRID)
+def test_train_parity(B, C, p1, q1, q2, T, th1, th2):
+    """One learning wave: outputs AND updated weights bit-exact — the fused
+    STDP epilogue consumes uniforms from the identical per-layer/per-column
+    key split, so the Bernoulli compares see the same bits."""
+    ref = _net(C, p1, q1, q2, T, th1, th2)
+    fused = with_impl(ref, "fused")
+    params = init_network(jax.random.PRNGKey(p1 * q1 + B), ref)
+    x = _x(ref, B, seed=B + C)
+    k = jax.random.PRNGKey(17)
+    outs_r, params_r = network_train_wave(x, params, ref, k)
+    outs_f, params_f = network_train_wave(x, params, fused, k)
+    outs_s, params_s = network_train_step(x, params, fused, k)
+    for a, b, c in zip(outs_r, outs_f, outs_s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, b, c in zip(params_r, params_f, params_s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        assert b.dtype == a.dtype == jnp.int8
+
+
+def test_train_step_jit_parity():
+    """The fused wave under jit (the production train-step context)."""
+    ref = _net(3, 10, 5, 4, 8, 6, 2)
+    fused = with_impl(ref, "fused")
+    params = init_network(jax.random.PRNGKey(0), ref)
+    x = _x(ref, 6)
+    k = jax.random.PRNGKey(5)
+    _, pr = network_train_step(x, params, ref, k)
+    _, pj = jax.jit(lambda xb, ps, kk: network_train_step(xb, ps, fused, kk))(
+        x, params, k)
+    for a, b in zip(pr, pj):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_dispatches_single_wave_call(monkeypatch):
+    """impl="fused" must enter repro.kernels.tnn_wave exactly ONCE per wave
+    (that is the whole point: one launch), and never for the references."""
+    calls = {"fwd": 0, "train": 0}
+    real_fwd, real_train = tnn_wave.wave_forward, tnn_wave.wave_train
+
+    def fwd(*a, **kw):
+        calls["fwd"] += 1
+        return real_fwd(*a, **kw)
+
+    def train(*a, **kw):
+        calls["train"] += 1
+        return real_train(*a, **kw)
+
+    monkeypatch.setattr(tnn_wave, "wave_forward", fwd)
+    monkeypatch.setattr(tnn_wave, "wave_train", train)
+
+    cfg = prototype_config(sites=4, theta1=12, theta2=3)
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    x = _x(cfg, 3)
+
+    network_forward(x, params, cfg)  # reference: no megakernel entry
+    network_train_wave(x, params, cfg, jax.random.PRNGKey(2))
+    assert calls == {"fwd": 0, "train": 0}
+
+    fcfg = with_impl(cfg, "fused")
+    network_forward(x, params, fcfg)
+    assert calls == {"fwd": 1, "train": 0}
+    network_train_wave(x, params, fcfg, jax.random.PRNGKey(2))
+    network_train_step(x, params, fcfg, jax.random.PRNGKey(2))
+    assert calls == {"fwd": 1, "train": 2}
+
+
+def test_seq_reduce_keeps_per_layer_path(monkeypatch):
+    """"seq" batch_reduce cannot run the fused counter epilogue: the wave
+    must fall back to the per-layer path and stay bit-exact with direct."""
+    monkeypatch.setattr(
+        tnn_wave, "wave_train",
+        lambda *a, **kw: pytest.fail("fused epilogue entered for seq"))
+    wave = WaveSpec()
+    stdp = STDPConfig(batch_reduce="seq")
+    l1 = LayerConfig(3, ColumnConfig(p=10, q=5, theta=6, wave=wave, stdp=stdp))
+    l2 = LayerConfig(3, ColumnConfig(p=5, q=4, theta=2, wave=wave, stdp=stdp))
+    ref = NetworkConfig(layers=(l1, l2))
+    params = init_network(jax.random.PRNGKey(0), ref)
+    x = _x(ref, 4)
+    k = jax.random.PRNGKey(9)
+    _, pr = network_train_wave(x, params, ref, k)
+    _, pf = network_train_wave(x, params, with_impl(ref, "fused"), k)
+    for a, b in zip(pr, pf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_non_capable_topology_falls_back():
+    """Networks outside the 2-layer same-site topology still run under
+    impl="fused" — as per-layer pallas launches — and match direct."""
+    base = _net(4, 12, 6, 5, 8, 6, 2)
+    third = LayerConfig(4, ColumnConfig(
+        p=5, q=3, theta=2, wave=base.layers[0].column.wave))
+    ref = NetworkConfig(layers=base.layers + (third,))
+    assert not padding.fused_wave_capable(ref)
+    params = init_network(jax.random.PRNGKey(0), ref)
+    x = _x(ref, 5)
+    zf = network_forward(x, params, with_impl(ref, "fused"))
+    for a, b in zip(network_forward(x, params, ref), zf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    k = jax.random.PRNGKey(3)
+    _, pr = network_train_wave(x, params, ref, k)
+    _, pf = network_train_wave(x, params, with_impl(ref, "fused"), k)
+    for a, b in zip(pr, pf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_wave_capable_predicate():
+    ok = _net(3, 10, 5, 4, 8, 6, 2)
+    assert padding.fused_wave_capable(ok)
+    # mismatched inter-layer width (l2.p != l1.q)
+    bad = dataclasses.replace(ok, layers=(
+        ok.layers[0],
+        LayerConfig(3, dataclasses.replace(ok.layers[1].column, p=6)),
+    ))
+    assert not padding.fused_wave_capable(bad)
+    # mismatched site counts
+    bad = dataclasses.replace(ok, layers=(
+        ok.layers[0], dataclasses.replace(ok.layers[1], n_cols=2)))
+    assert not padding.fused_wave_capable(bad)
+    # mismatched wave specs
+    bad = dataclasses.replace(ok, layers=(
+        ok.layers[0],
+        LayerConfig(3, dataclasses.replace(
+            ok.layers[1].column, wave=WaveSpec(time_bits=4))),
+    ))
+    assert not padding.fused_wave_capable(bad)
+    with pytest.raises(ValueError, match="not fused-wave capable"):
+        padding.network_plan(bad, 8)
+
+
+def test_pad_plan_geometry():
+    plan = padding.PadPlan.make(5, 20, block_b=64, block_p=256,
+                                interpret=True)
+    assert (plan.bp, plan.pp) == (8, 24)  # clamped blocks, 8-aligned pads
+    assert plan.n_b == 1
+    x = jnp.zeros((5, 20), jnp.int8)
+    xp = plan.pad_spikes(x, 8, p_axis=1)
+    assert xp.shape == (8, 24)
+    assert int(xp[7, 0]) == 8 and int(xp[0, 23]) == 8  # T = "no spike"
+    w = plan.pad_weights(jnp.ones((20, 4), jnp.int8))
+    assert w.shape == (24, 4) and int(w[23, 0]) == 0
+    u = plan.pad_uniforms(jnp.zeros((5, 20, 4)), p_axis=1)
+    assert u.shape == (8, 24, 4) and float(u[7, 0, 0]) == 1.0
+    # batch-only plans (the WTA launch) have no synapse axis
+    bplan = padding.PadPlan.make(5, block_b=128, interpret=True)
+    assert bplan.pp == 0 and bplan.bp == 8
+
+
+def test_network_plan_cached_and_static():
+    cfg = _net(3, 10, 5, 4, 8, 6, 2)
+    a = padding.network_plan(cfg, 8)
+    assert a is padding.network_plan(cfg, 8)  # lru-cached on the config
+    assert a != padding.network_plan(cfg, 16)
+    assert (a.p1, a.q1, a.q2, a.n_cols) == (10, 5, 4, 3)
+    assert a.pad.pp == 16  # p1=10 -> 8-aligned 16, single tile
+    hash(a)  # must stay hashable: it rides through jit as a static arg

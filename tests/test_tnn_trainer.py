@@ -72,7 +72,7 @@ def test_params_tree_roundtrip():
             {"layer_00": params[1], "layer_01": params[1]}, cfg)
 
 
-@pytest.mark.parametrize("impl", ["direct", "pallas"])
+@pytest.mark.parametrize("impl", ["direct", "pallas", "fused"])
 def test_train_step_matches_reference_wave(impl):
     """Counter-form step (net counters + one saturating apply) is bit-exact
     with the applied update of network_train_wave, per backend."""
@@ -124,6 +124,36 @@ def test_trainer_checkpoint_resume_bitexact(tmp_path):
                                   np.asarray(sb["vote_table"]))
     assert ea["has_vote"] and eb["has_vote"]
     assert out_a["accuracy"] == out_b["accuracy"]
+
+
+def test_trainer_checkpoint_resume_bitexact_fused(tmp_path):
+    """The same N -> save -> restore -> M == N+M contract under the
+    single-launch wave executor, AND backend-invariance of the trained
+    state: a fused run ends bit-identical to a direct run (the uniforms
+    come from the same key split, so the wave updates are the same bits)."""
+    cfg = _cfg("fused")
+    dir_a, dir_b = str(tmp_path / "straight"), str(tmp_path / "resumed")
+
+    out_a = TNNTrainer(cfg, _tcfg(dir_a, epochs=2)).run()
+    assert out_a["final_wave"] == 8 and not out_a["resumed"]
+
+    TNNTrainer(cfg, _tcfg(dir_b, epochs=1)).run()
+    out_b = TNNTrainer(cfg, _tcfg(dir_b, epochs=2)).run()
+    assert out_b["final_wave"] == 8 and out_b["resumed"]
+
+    sa, ea = restore_tnn(Checkpointer(dir_a), cfg)
+    sb, eb = restore_tnn(Checkpointer(dir_b), cfg)
+    _assert_states_equal(sa, sb)
+    np.testing.assert_array_equal(np.asarray(sa["vote_table"]),
+                                  np.asarray(sb["vote_table"]))
+    assert ea["has_vote"] and eb["has_vote"]
+    assert out_a["accuracy"] == out_b["accuracy"]
+
+    # backend-invariance: fused-trained == direct-trained, bit for bit
+    dir_c = str(tmp_path / "direct")
+    TNNTrainer(_cfg("direct"), _tcfg(dir_c, epochs=2)).run()
+    sc, _ = restore_tnn(Checkpointer(dir_c), _cfg("direct"))
+    _assert_states_equal(sa, sc)
 
 
 def test_engine_warm_start_matches_fit_engine(tmp_path):
@@ -224,23 +254,26 @@ SHARDED_SCRIPT = textwrap.dedent("""
     from repro.core import init_train_state, make_train_step
     from repro.launch.mesh import make_host_mesh
 
-    cfg = network_config(sites=4, theta1=6, theta2=2, impl="direct")
-    T = cfg.layers[0].column.wave.T
-    x = jax.random.randint(jax.random.PRNGKey(3), (8, 4, 32), 0, T + 1,
-                           dtype=jnp.int8)
-
-    step_un = make_train_step(cfg, donate=False)
-    st_a, za = step_un(init_train_state(jax.random.PRNGKey(0), cfg), x)
-
     mesh = make_host_mesh()
     assert mesh.shape["data"] == 4, mesh.shape
-    step_sh = make_train_step(cfg, mesh=mesh, donate=False)
-    st_b, zb = step_sh(init_train_state(jax.random.PRNGKey(0), cfg), x)
+    # "fused" = the single-launch wave executor: its counter epilogue must
+    # psum exactly like the per-layer path (DESIGN.md §10).
+    for impl in ("direct", "fused"):
+        cfg = network_config(sites=4, theta1=6, theta2=2, impl=impl)
+        T = cfg.layers[0].column.wave.T
+        x = jax.random.randint(jax.random.PRNGKey(3), (8, 4, 32), 0, T + 1,
+                               dtype=jnp.int8)
 
-    for k in st_a["params"]:
-        np.testing.assert_array_equal(np.asarray(st_a["params"][k]),
-                                      np.asarray(st_b["params"][k]))
-    np.testing.assert_array_equal(np.asarray(za), np.asarray(zb))
+        step_un = make_train_step(cfg, donate=False)
+        st_a, za = step_un(init_train_state(jax.random.PRNGKey(0), cfg), x)
+
+        step_sh = make_train_step(cfg, mesh=mesh, donate=False)
+        st_b, zb = step_sh(init_train_state(jax.random.PRNGKey(0), cfg), x)
+
+        for k in st_a["params"]:
+            np.testing.assert_array_equal(np.asarray(st_a["params"][k]),
+                                          np.asarray(st_b["params"][k]))
+        np.testing.assert_array_equal(np.asarray(za), np.asarray(zb))
     print("sharded == unsharded OK")
 """)
 

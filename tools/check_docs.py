@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Fail if the docs drift from the code they describe.
 
-Two checks, both run by CI next to the tier-1 pytest run:
+Three checks, all run by CI next to the tier-1 pytest run:
 
 1. **DESIGN.md §N references.** Docstrings cite the architecture reference
    by section number; every ``DESIGN.md §N`` occurring under ``src/`` (and,
@@ -11,13 +11,18 @@ Two checks, both run by CI next to the tier-1 pytest run:
    documents ``ColumnConfig.impl`` values; every backend a table row names
    must be one ``ColumnConfig.IMPLS`` actually accepts (parsed from
    ``src/repro/core/column.py`` — no jax import needed).
+3. **Launcher ``--impl`` choices.** The backend choices
+   ``launch/train.py`` and ``launch/serve.py`` advertise must be exactly
+   ``ColumnConfig.IMPLS`` — a backend that exists but isn't launchable (or
+   a launcher flag naming a removed backend) is doc drift of the
+   executable kind.
 
 Run from the repo root:
 
     python tools/check_docs.py
 
-Exit status 0 = everything resolves; 1 = dangling references or unknown
-backend rows (listed).
+Exit status 0 = everything resolves; 1 = dangling references, unknown
+backend rows, or launcher/IMPLS drift (listed).
 """
 from __future__ import annotations
 
@@ -29,6 +34,9 @@ REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
 SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
 SCAN_DIRS = ("src", "tests", "examples", "benchmarks")
 IMPLS_RE = re.compile(r"IMPLS\s*=\s*\(([^)]*)\)")
+IMPL_CHOICES_RE = re.compile(
+    r"--impl\"[^)]*?choices=\(([^)]*)\)", re.DOTALL)
+LAUNCHERS = ("src/repro/launch/train.py", "src/repro/launch/serve.py")
 
 
 def _column_impls(root: pathlib.Path) -> set:
@@ -77,6 +85,26 @@ def check_readme_backends(root: pathlib.Path) -> list:
     return problems
 
 
+def check_launcher_impls(root: pathlib.Path) -> list:
+    """The ``--impl`` choices each launcher advertises must be exactly the
+    backends ``ColumnConfig`` accepts (order-insensitive)."""
+    impls = _column_impls(root)
+    problems = []
+    for rel in LAUNCHERS:
+        src = (root / rel).read_text()
+        m = IMPL_CHOICES_RE.search(src)
+        if not m:
+            problems.append(f"{rel}: no --impl argument with literal "
+                            f"choices=(...) found")
+            continue
+        choices = set(re.findall(r'"([^"]+)"', m.group(1)))
+        if choices != impls:
+            problems.append(
+                f"{rel}: --impl choices {sorted(choices)} != "
+                f"ColumnConfig.IMPLS {sorted(impls)}")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -100,8 +128,9 @@ def main() -> int:
                             f"DESIGN.md §{sec} (have: {sorted(sections)})")
 
     backend_problems = check_readme_backends(root)
+    launcher_problems = check_launcher_impls(root)
 
-    if dangling or backend_problems:
+    if dangling or backend_problems or launcher_problems:
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -110,10 +139,15 @@ def main() -> int:
             print("check_docs: README backend-matrix problems:", file=sys.stderr)
             for p in backend_problems:
                 print(f"  {p}", file=sys.stderr)
+        if launcher_problems:
+            print("check_docs: launcher --impl problems:", file=sys.stderr)
+            for p in launcher_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
-          f"names only accepted impls")
+          f"names only accepted impls; launcher --impl choices match "
+          f"ColumnConfig.IMPLS")
     return 0
 
 
