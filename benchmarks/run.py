@@ -21,6 +21,9 @@ System benches (this framework beyond the paper):
   tnn_train_throughput  — waves/sec through the jitted online-STDP train
                           step (DESIGN.md §9) + the hwmodel PPA priced for
                           the trained network's actual (p, q) structure.
+  tnn_deep_wave_throughput — the 3-layer ``deep_config`` cascade: waves/sec
+                          per backend + kernel launches/wave (fused must
+                          stay at 1 for any depth, DESIGN.md §11).
   lm_step_micro         — smoke-config LM train-step wall time (tokens/s).
   roofline_summary      — aggregates experiments/dryrun JSONs.
 
@@ -29,7 +32,10 @@ writes the structured rows for artifact upload and regression checking
 (``benchmarks/check_regression.py`` compares waves/sec against the
 committed ``benchmarks/baseline.json``); ``--impl`` restricts the TNN
 wave/train benches to one backend (the CI bench job uploads both the
-default all-backend artifact and an ``--impl fused`` one).
+default all-backend artifact and an ``--impl fused`` one);
+``--deep-only`` runs the 3-layer cascade bench — the ONLY mode that emits
+the deep rows, so their gate has a single committed baseline (the
+``bench-deep.json`` artifact vs ``benchmarks/baseline-deep.json``).
 """
 from __future__ import annotations
 
@@ -66,34 +72,9 @@ def _timeit(fn: Callable, n: int = 5) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
-def _pallas_launch_count(fn: Callable, *args) -> int:
-    """Count ``pallas_call`` equations in ``fn``'s jaxpr (recursing through
-    pjit/scan/vmap sub-jaxprs) — the number of kernel launches one call
-    issues. vmapped/grid-extended calls count once: they ARE one launch.
-    This is the metric the fused wave executor moves: per-layer pallas runs
-    2 forward + 2 STDP launches per wave, impl="fused" runs ONE."""
-    import jax
-
-    def walk_param(v) -> int:
-        if isinstance(v, (list, tuple)):
-            return sum(walk_param(x) for x in v)
-        if hasattr(v, "jaxpr"):   # ClosedJaxpr
-            return walk(v.jaxpr)
-        if hasattr(v, "eqns"):    # Jaxpr
-            return walk(v)
-        return 0
-
-    def walk(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                n += walk_param(v)
-        return n
-
-    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
-
+# Kernel-launch counting lives in repro.utils.tracing.pallas_launch_count —
+# shared with the tests so benchmark and assertion count the same thing.
+# (Imported inside the benches: this module must parse without jax.)
 
 # ---------------------------------------------------------------------------
 
@@ -186,6 +167,7 @@ def tnn_wave_throughput(smoke: bool = False,
         encode_images, init_network, network_train_wave, prototype_config,
         with_impl,
     )
+    from repro.utils.tracing import pallas_launch_count
 
     sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
     side = image_side(sites)
@@ -202,7 +184,7 @@ def tnn_wave_throughput(smoke: bool = False,
     for impl in impls:
         icfg = with_impl(cfg, impl)
         wave = lambda xb, ps, kk: network_train_wave(xb, ps, icfg, kk)
-        launches = _pallas_launch_count(wave, x, params, k)
+        launches = pallas_launch_count(wave, x, params, k)
         step = jax.jit(wave)
         us = _timeit(lambda: jax.block_until_ready(step(x, params, k)[1][0]), n=2)
         us_by_impl[impl] = us
@@ -292,6 +274,63 @@ def tnn_train_throughput(smoke: bool = False,
               area_mm2=round(ppa.area_mm2, 4), edp=round(ppa.edp_nj_ns, 4))
 
 
+def tnn_deep_wave_throughput(smoke: bool = False,
+                             impls: tuple = ("direct", "pallas", "fused")) -> None:
+    """Training throughput for the 3-LAYER cascade (``deep_config``,
+    DESIGN.md §11): waves/sec through the jitted train step per backend,
+    plus the kernel-launch count per learning wave. The launch count is the
+    depth-generalization claim in one number — per-layer pallas issues 2N
+    launches for an N-layer cascade (here 6), the fused wave executor
+    issues ONE at any depth (asserted here and in
+    ``tests/test_topology_properties.py``). The CI bench job uploads these
+    rows as ``bench-deep.json``, gated by ``check_regression.py`` against
+    ``benchmarks/baseline-deep.json``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import deep_config
+    from repro.core import (
+        init_network, init_train_state, make_train_step, network_train_wave,
+    )
+    from repro.utils.tracing import pallas_launch_count
+
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
+    B = 8 if smoke else 16
+    depth = 3
+    print(f"\n== 3-layer cascade online-STDP throughput ({depth}x{sites} "
+          f"columns, batch {B}, {' vs '.join(impls)}) ==")
+    wps: Dict[str, float] = {}
+    for impl in impls:
+        cfg = deep_config(sites=sites, impl=impl)
+        assert len(cfg.layers) == depth
+        T = cfg.layers[0].column.wave.T
+        x = jax.random.randint(
+            jax.random.PRNGKey(1), (B, sites, cfg.layers[0].column.p),
+            0, T + 1, dtype=jnp.int8)
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        wave = lambda xb, ps, kk: network_train_wave(xb, ps, cfg, kk)
+        launches = pallas_launch_count(wave, x, params, jax.random.PRNGKey(2))
+        if impl == "fused":
+            assert launches == 1, (
+                f"fused 3-layer wave issued {launches} launches, want 1")
+        step = make_train_step(cfg, donate=False)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        us = _timeit(lambda: jax.block_until_ready(step(state, x)[1]),
+                     n=3 if smoke else 5)
+        wps[impl] = 1e6 / us
+        print(f"{impl:9s} deep train step: {us/1e3:9.1f} ms/wave = "
+              f"{wps[impl]:8.2f} waves/s  [{launches} kernel launch(es)/wave]")
+        _emit(f"tnn_train_deep3_{impl}", us,
+              waves_per_s=round(wps[impl], 3),
+              images_per_s=round(B * wps[impl], 1))
+        _emit(f"tnn_deep3_launches_{impl}", 0.0, n=launches)
+    if {"pallas", "fused"} <= set(wps):
+        ratio = wps["fused"] / max(wps["pallas"], 1e-12)
+        print(f"fused/pallas 3-layer training speedup: {ratio:.2f}x "
+              f"on {jax.default_backend()} (6 launches -> 1)")
+        _emit("tnn_deep3_fused_speedup", 0.0, x=round(ratio, 3))
+
+
 def lm_step_micro(smoke: bool = False) -> None:
     import jax
     from repro.configs import smoke_config
@@ -351,19 +390,30 @@ def main() -> None:
                     help="restrict the TNN wave/train benches to one "
                          "backend ('all' = direct vs pallas vs fused — the "
                          "comparison the committed baseline gates)")
+    ap.add_argument("--deep-only", action="store_true",
+                    help="run only the 3-layer cascade bench (the CI "
+                         "bench-deep.json artifact, gated against "
+                         "benchmarks/baseline-deep.json)")
     args = ap.parse_args()
     impls = (("direct", "pallas", "fused") if args.impl == "all"
              else (args.impl,))
 
     t0 = time.time()
-    table1_columns()
-    table2_prototype()
-    macro_layouts()
-    column_throughput(smoke=args.smoke)
-    tnn_wave_throughput(smoke=args.smoke, impls=impls)
-    tnn_train_throughput(smoke=args.smoke, impls=impls)
-    lm_step_micro(smoke=args.smoke)
-    roofline_summary()
+    # The 3-layer cascade rows live ONLY in the --deep-only artifact so the
+    # deep3 waves/sec gate has exactly one committed baseline
+    # (baseline-deep.json) — double-gating the same row from bench.json too
+    # would let the two baselines drift apart.
+    if args.deep_only:
+        tnn_deep_wave_throughput(smoke=args.smoke, impls=impls)
+    else:
+        table1_columns()
+        table2_prototype()
+        macro_layouts()
+        column_throughput(smoke=args.smoke)
+        tnn_wave_throughput(smoke=args.smoke, impls=impls)
+        tnn_train_throughput(smoke=args.smoke, impls=impls)
+        lm_step_micro(smoke=args.smoke)
+        roofline_summary()
     print("\nname,us_per_call,derived")
     for row in ROWS:
         print(row)

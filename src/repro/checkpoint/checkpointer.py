@@ -65,9 +65,12 @@ def tnn_config_fingerprint(cfg) -> str:
     """Compact structural+dynamics identity of a network config, stored in
     checkpoint metadata and validated on restore: weights and especially
     the vote table are only valid under the geometry and firing thresholds
-    they were trained with. Backend (``impl``) is deliberately excluded —
-    params are backend-invariant, so a pallas-trained checkpoint serves on
-    any impl."""
+    they were trained with. One segment per layer, in order — so cascade
+    DEPTH is part of the identity, and an N-layer checkpoint refuses to
+    restore into a config of different depth or per-layer geometry just
+    like a sites/theta mismatch. Backend (``impl``) is deliberately
+    excluded — params are backend-invariant, so a pallas-trained
+    checkpoint serves on any impl."""
     layers = ";".join(
         f"{l.n_cols}x{l.column.p}x{l.column.q}t{l.column.theta}"
         for l in cfg.layers)

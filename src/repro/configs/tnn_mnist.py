@@ -5,10 +5,12 @@ prototype, 625 columns of 32x12 -> 625 columns of 12x10 (13,750 neurons,
 ``network_config(impl=...)`` selects the execution backend for the whole
 stack: "direct"/"matmul" are the reference vmap formulations, "pallas"
 routes every layer through the fused kernels in ``repro.kernels``, and
-"fused" runs the whole 2-layer wave as ONE Pallas launch via
+"fused" runs the whole wave as ONE Pallas launch via
 ``repro.kernels.tnn_wave`` — the prototype is exactly the topology the
 fused wave executor targets (see DESIGN.md §2, §10 and the backend matrix
-in README.md).
+in README.md). ``deep_config(widths=...)`` generalizes the prototype to an
+N-layer cascade (DESIGN.md §11) that every backend — including the
+single-launch fused executor — runs end to end.
 
 Reduced ``sites`` (smoke tests / CPU serving) must be a perfect square
 S = s*s; the matching input field is then (s+3, s+3) pixels, since a k=4
@@ -17,7 +19,9 @@ stride-1 patch grid over an (s+3)^2 image yields exactly s*s sites.
 import dataclasses
 import math
 
-from repro.core.network import prototype_config, with_impl
+from repro.core.column import ColumnConfig
+from repro.core.layer import LayerConfig
+from repro.core.network import NetworkConfig, prototype_config, with_impl
 from repro.core.stdp import STDPConfig
 from repro.core.temporal import WaveSpec
 
@@ -65,6 +69,57 @@ def network_config(sites: int = 625, theta1: int = 24, theta2: int = 8,
     )
     cfg = dataclasses.replace(cfg, image_hw=(side, side))
     return with_impl(cfg, impl)
+
+
+def deep_config(sites: int = 625, widths=(12, 12, 10), thetas=None,
+                impl: str = "direct"):
+    """An N-layer same-site cascade over the paper's column fabric
+    (DESIGN.md §11): layer 1 = ``sites`` columns of 32 x ``widths[0]``
+    (the on/off patch front end), layer i>1 = ``sites`` columns of
+    ``widths[i-1]`` x ``widths[i]`` — depth and per-layer width are free
+    design parameters, as the TNN design-framework follow-ups treat them.
+
+    ``thetas`` gives one firing threshold per layer; the default reuses the
+    launcher convention: the input layer takes ``default_thetas(sites)[0]``,
+    every deeper layer the downstream threshold. The defaults build the
+    3-layer variant of the prototype (32x12 -> 12x12 -> 12x10). Every
+    backend runs these configs; ``impl="fused"`` executes the whole cascade
+    as ONE Pallas launch per gamma wave at any depth.
+    """
+    if not widths:
+        raise ValueError("deep_config needs at least one layer width")
+    side = image_side(sites)
+    if thetas is None:
+        t_in, t_deep = default_thetas(sites)
+        thetas = (t_in,) + (t_deep,) * (len(widths) - 1)
+    if len(thetas) != len(widths):
+        raise ValueError(
+            f"got {len(thetas)} thetas for {len(widths)} layer widths")
+    layers, p = [], 2 * PATCH_K ** 2
+    for q, theta in zip(widths, thetas):
+        layers.append(LayerConfig(
+            sites, ColumnConfig(p=p, q=q, theta=theta, wave=WAVE, stdp=STDP)))
+        p = q
+    cfg = NetworkConfig(layers=tuple(layers), image_hw=(side, side))
+    return with_impl(cfg, impl)
+
+
+def launcher_network_config(sites: int, depth: int = 2,
+                            impl: str = "direct"):
+    """The convention ``launch/train.py`` and ``launch/serve.py`` share for
+    building the network from CLI flags — train and serve MUST build the
+    same config or the checkpoint fingerprint refuses the warm start.
+    ``depth=2`` is the paper prototype under ``default_thetas``; any other
+    depth is the ``deep_config`` cascade with 12-wide hidden layers and a
+    10-wide readout layer."""
+    if depth < 1:
+        raise ValueError(f"depth={depth}")
+    if depth == 2:
+        theta1, theta2 = default_thetas(sites)
+        return network_config(sites=sites, theta1=theta1, theta2=theta2,
+                              impl=impl)
+    widths = (12,) * (depth - 1) + (10,)
+    return deep_config(sites=sites, widths=widths, impl=impl)
 
 
 def train_config(sites: int = 625, smoke: bool = False, **overrides):

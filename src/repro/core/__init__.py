@@ -28,6 +28,7 @@ from repro.core.network import (
     init_network,
     init_train_state,
     encode_images,
+    input_wave_spec,
     make_train_step,
     network_forward,
     network_train_step,
@@ -50,7 +51,7 @@ __all__ = [
     "column_step", "crossing_time", "init_weights", "wta_inhibit",
     "LayerConfig", "init_layer", "layer_forward", "layer_stdp_net", "layer_step",
     "NetworkConfig", "prototype_config", "init_network", "init_train_state",
-    "encode_images", "make_train_step",
+    "encode_images", "input_wave_spec", "make_train_step",
     "network_forward", "network_train_step", "network_train_wave",
     "params_from_tree", "params_to_tree",
     "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",

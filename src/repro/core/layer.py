@@ -11,8 +11,8 @@ routes the whole layer through the fused kernels in :mod:`repro.kernels`
 "fused" selects the whole-network single-launch wave executor, which is a
 NETWORK-level fusion (:mod:`repro.core.network` dispatches it); at layer
 granularity it is identical to "pallas" — that is also the fallback for
-networks outside the fused executor's 2-layer same-site topology
-(DESIGN.md §10).
+networks outside the fused executor's same-site N-layer chain topology
+(DESIGN.md §10, §11).
 
 Also provides the receptive-field plumbing for the MNIST prototype: 4x4
 pixel patches x {on, off} polarity = 32 synapses per column, 25x25 = 625

@@ -1,9 +1,15 @@
-"""Multi-layer TNNs — in particular the paper's 2-layer MNIST prototype.
+"""Multi-layer TNNs — the paper's 2-layer MNIST prototype and arbitrary
+N-layer cascades of the same column fabric.
 
 Fig. 19: layer 1 = 625 columns of 32x12 (4x4-pixel on/off receptive fields,
 25x25 sites), layer 2 = 625 columns of 12x10 (same-site, fed by layer 1's
 12 neurons). 13,750 neurons / 315,000 synapses total. Unsupervised STDP
 throughout; classification = per-site winner labelling + majority vote.
+Depth is a free design parameter (the TNN design-framework follow-ups treat
+it as such): every entry point here — forward, train wave, counter-form
+train step, params tree — is depth-agnostic, and ``impl="fused"`` runs any
+fused-capable cascade as ONE kernel launch per gamma wave (DESIGN.md §11;
+``configs.tnn_mnist.deep_config`` builds N-layer configs).
 """
 from __future__ import annotations
 
@@ -103,15 +109,37 @@ def dog_filter(images01: jax.Array) -> jax.Array:
     return x - surround
 
 
+def input_wave_spec(cfg: NetworkConfig) -> WaveSpec:
+    """The wave spec the image encoder must encode against — validated, not
+    silently ``cfg.layers[0]``: the encoder's time base is consumed by the
+    whole cascade (the readout reads ``layers[-1]`` with the same T), so a
+    network whose layers disagree on the spec has no well-defined encoding
+    and must be rejected up front rather than mis-encoded."""
+    specs = [l.column.wave for l in cfg.layers]
+    if any(s != specs[0] for s in specs):
+        raise ValueError(
+            f"encode_images needs one wave spec across the cascade, but the "
+            f"layers disagree: {[(s.T, s.w_max) for s in specs]} — encoding "
+            f"against layers[0] would silently mis-time every deeper layer")
+    p_in = 2 * cfg.patch_k ** 2
+    if cfg.layers[0].column.p != p_in:
+        raise ValueError(
+            f"input-facing layer expects fan-in {cfg.layers[0].column.p}, "
+            f"but a patch_k={cfg.patch_k} on/off front end produces "
+            f"{p_in} synapses per site")
+    return specs[0]
+
+
 def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
     """(B, H, W) float in [0,1] -> (B, sites, 32) int8 spike times.
 
     DoG contrast -> on/off half-wave rectification -> temporal encoding.
-    Strong contrast spikes early; zero contrast never spikes."""
+    Strong contrast spikes early; zero contrast never spikes. The wave spec
+    is validated against the whole cascade (:func:`input_wave_spec`)."""
+    wave = input_wave_spec(cfg)
     c = dog_filter(images01) * 3.0  # contrast gain
     on = extract_patches(jnp.clip(c, 0.0, 1.0), cfg.patch_k)
     off = extract_patches(jnp.clip(-c, 0.0, 1.0), cfg.patch_k)
-    wave = cfg.layers[0].column.wave
     t_on = jnp.round((1.0 - on) * wave.T)
     t_off = jnp.round((1.0 - off) * wave.T)
     out = jnp.stack([t_on, t_off], axis=-1).reshape(
@@ -122,9 +150,10 @@ def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
 def _uses_fused_wave(cfg: NetworkConfig) -> bool:
     """True when the network should run as ONE megakernel launch per gamma
     wave: every layer selects ``impl="fused"`` AND the topology matches the
-    executor (2 same-site layers, shared wave spec — DESIGN.md §10).
-    Fused-but-incapable networks fall through to the per-layer path, where
-    each "fused" layer executes as a "pallas" launch."""
+    executor (an N-layer chain of same-site layers, shared wave spec —
+    DESIGN.md §10, §11). Fused-but-incapable networks fall through to the
+    per-layer path, where each "fused" layer executes as a "pallas"
+    launch."""
     return (all(l.column.impl == "fused" for l in cfg.layers)
             and _kpad.fused_wave_capable(cfg))
 
@@ -141,8 +170,8 @@ def network_forward(
     """Run all layers; returns per-layer post-WTA spike times."""
     if _uses_fused_wave(cfg):
         plan = _kpad.network_plan(cfg, x.shape[0])
-        z1, z2 = _ktw.wave_forward(x, params[0], params[1], plan=plan)
-        return [z1.astype(jnp.int8), z2.astype(jnp.int8)]
+        zs = _ktw.wave_forward(x, tuple(params), plan=plan)
+        return [z.astype(jnp.int8) for z in zs]
     outs = []
     for w, lcfg in zip(params, cfg.layers):
         x = layer_forward(x, w, lcfg)
@@ -161,15 +190,15 @@ def network_train_wave(
     if _uses_fused_wave(cfg) and _fused_stdp_ready(cfg):
         B = x.shape[0]
         plan = _kpad.network_plan(cfg, B)
-        u1 = layer_uniforms(keys[0], cfg.layers[0], B)
-        u2 = layer_uniforms(keys[1], cfg.layers[1], B)
-        z1, z2, net1, net2 = _ktw.wave_train(
-            x, params[0], params[1], u1[:, 0], u1[:, 1], u2[:, 0], u2[:, 1],
+        us = tuple(layer_uniforms(k, lcfg, B)
+                   for lcfg, k in zip(cfg.layers, keys))
+        zs, nets = _ktw.wave_train(
+            x, tuple(params), tuple((u[:, 0], u[:, 1]) for u in us),
             plan=plan)
         return (
-            [z1.astype(jnp.int8), z2.astype(jnp.int8)],
-            [apply_net(params[0], net1, cfg.layers[0].column.wave),
-             apply_net(params[1], net2, cfg.layers[1].column.wave)],
+            [z.astype(jnp.int8) for z in zs],
+            [apply_net(w, net, lcfg.column.wave)
+             for w, net, lcfg in zip(params, nets, cfg.layers)],
         )
     new_params, outs = [], []
     for w, lcfg, k in zip(params, cfg.layers, keys):
@@ -235,25 +264,24 @@ def network_train_step(
     row0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * b_local
     keys = jax.random.split(rng, len(cfg.layers))
     if _uses_fused_wave(cfg) and _fused_stdp_ready(cfg):
-        # One megakernel launch for the whole wave (DESIGN.md §10). The
-        # uniforms are still drawn for the GLOBAL batch from the same
-        # per-layer/per-column key split and sliced per shard, and the
-        # counters still psum — bits identical to the per-layer path.
+        # One megakernel launch for the whole wave, any depth (DESIGN.md
+        # §10, §11). The uniforms are still drawn for the GLOBAL batch from
+        # the same per-layer/per-column key split and sliced per shard, and
+        # the counters still psum — bits identical to the per-layer path.
         plan = _kpad.network_plan(cfg, b_local)
         us = []
         for lcfg, k in zip(cfg.layers, keys):
             u = layer_uniforms(k, lcfg, B)
             us.append(jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2))
-        z1, z2, net1, net2 = _ktw.wave_train(
-            x, params[0], params[1],
-            us[0][:, 0], us[0][:, 1], us[1][:, 0], us[1][:, 1], plan=plan)
+        zs, nets = _ktw.wave_train(
+            x, tuple(params), tuple((u[:, 0], u[:, 1]) for u in us),
+            plan=plan)
         if axis_name is not None:
-            net1 = jax.lax.psum(net1, axis_name)
-            net2 = jax.lax.psum(net2, axis_name)
+            nets = [jax.lax.psum(net, axis_name) for net in nets]
         return (
-            [z1.astype(jnp.int8), z2.astype(jnp.int8)],
-            [apply_net(params[0], net1, cfg.layers[0].column.wave),
-             apply_net(params[1], net2, cfg.layers[1].column.wave)],
+            [z.astype(jnp.int8) for z in zs],
+            [apply_net(w, net, lcfg.column.wave)
+             for w, net, lcfg in zip(params, nets, cfg.layers)],
         )
     new_params, outs = [], []
     for w, lcfg, k in zip(params, cfg.layers, keys):

@@ -120,55 +120,72 @@ class PadPlan:
 
 
 # ---------------------------------------------------------------------------
-# Network-level plan for the fused wave executor (DESIGN.md §10)
+# Network-level plan for the fused wave executor (DESIGN.md §10, §11)
 # ---------------------------------------------------------------------------
 
 # The megakernel keeps each column's layer-1 synapse axis in ONE tile (the
 # whole wave runs without an inter-tile reduction), so padded p1 is capped.
+# Deeper layers' fan-ins are previous layers' neuron counts (<= 128 lanes),
+# so only the input-facing synapse axis ever needs this cap.
 MAX_FUSED_P1 = 512
 
 
 @dataclasses.dataclass(frozen=True)
 class NetworkPlan:
-    """Static compile plan for one fused gamma wave over a 2-layer same-site
-    network: padded extents + every per-layer constant the megakernel needs
-    as a compile-time value. Hashable — passed to ``jax.jit`` as static."""
+    """Static compile plan for one fused gamma wave over an N-layer
+    same-site cascade: padded extents + every per-layer constant the
+    megakernel needs as a compile-time value, in layer order. Hashable —
+    passed to ``jax.jit`` as static, so the per-layer geometry is unrolled
+    from the plan at trace time (DESIGN.md §11)."""
 
     n_cols: int
-    p1: int                # layer-1 fan-in (logical)
-    q1: int                # layer-1 neurons = layer-2 fan-in
-    q2: int                # layer-2 neurons
-    theta1: int
-    theta2: int
+    ps: Tuple[int, ...]          # logical fan-in per layer (ps[i] = qs[i-1])
+    qs: Tuple[int, ...]          # neurons per layer
+    thetas: Tuple[int, ...]      # firing threshold per layer
     T: int
     w_max: int
-    pad: PadPlan           # batch axis + layer-1 synapse axis
+    pad: PadPlan                 # batch axis + layer-1 synapse axis
     # static STDP constants per layer: stabilize table + (capture, backoff,
     # search) rates — the Bernoulli side of the counter epilogue.
-    table1: Tuple[float, ...]
-    table2: Tuple[float, ...]
-    mus1: Tuple[float, float, float]
-    mus2: Tuple[float, float, float]
+    tables: Tuple[Tuple[float, ...], ...]
+    mus: Tuple[Tuple[float, float, float], ...]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.qs)
+
+    @property
+    def pps(self) -> Tuple[int, ...]:
+        """Padded fan-in extent per layer: the input-facing synapse axis is
+        padded to the plan's single tile; deeper fan-ins are inter-layer
+        volleys that never leave VMEM, so they stay at logical extent."""
+        return (self.pad.pp,) + self.ps[1:]
 
 
 def fused_wave_capable(cfg) -> bool:
     """Whether ``cfg`` (a ``core.network.NetworkConfig``) matches the fused
-    wave executor's topology: exactly two same-site layers where layer 2's
-    fan-in is layer 1's neuron count, one shared wave spec, and extents the
-    single-tile megakernel can hold (q <= 128 lanes, padded p1 <=
-    ``MAX_FUSED_P1``). Networks outside this shape run ``impl="fused"``
-    as per-layer pallas launches instead (DESIGN.md §10)."""
-    if len(cfg.layers) != 2:
+    wave executor's topology: an N-layer (N >= 1) cascade of same-site
+    layers chained so each layer's fan-in is the previous layer's neuron
+    count, one shared wave spec, and extents the single-tile megakernel can
+    hold (every q <= 128 lanes, padded p1 <= ``MAX_FUSED_P1``). Networks
+    outside this shape run ``impl="fused"`` as per-layer pallas launches
+    instead (DESIGN.md §10, §11)."""
+    layers = cfg.layers
+    if not layers:
         return False
-    l1, l2 = cfg.layers
-    return (
-        l1.n_cols == l2.n_cols
-        and l2.column.p == l1.column.q
-        and l1.column.wave == l2.column.wave
-        and l1.column.q <= 128
-        and l2.column.q <= 128
-        and pad_to(l1.column.p, 8) <= MAX_FUSED_P1
-    )
+    first = layers[0]
+    if pad_to(first.column.p, 8) > MAX_FUSED_P1:
+        return False
+    prev_q = None
+    for l in layers:
+        if (l.n_cols != first.n_cols
+                or l.column.wave != first.column.wave
+                or l.column.q > 128):
+            return False
+        if prev_q is not None and l.column.p != prev_q:
+            return False
+        prev_q = l.column.q
+    return True
 
 
 @functools.lru_cache(maxsize=64)
@@ -182,23 +199,22 @@ def network_plan(cfg, batch: int, block_b: int = 64,
     if not fused_wave_capable(cfg):
         l_desc = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
         raise ValueError(
-            f"network {l_desc} is not fused-wave capable: need exactly 2 "
-            f"same-site layers with l2.p == l1.q, a shared WaveSpec, "
-            f"q <= 128 and padded p1 <= {MAX_FUSED_P1}")
-    l1, l2 = cfg.layers
-    spec = l1.column.wave
-    pad = PadPlan.make(batch, l1.column.p, block_b=block_b,
+            f"network {l_desc} is not fused-wave capable: need same-site "
+            f"layers chained so each fan-in equals the previous layer's "
+            f"neuron count, a shared WaveSpec, every q <= 128 and padded "
+            f"p1 <= {MAX_FUSED_P1}")
+    first = cfg.layers[0]
+    spec = first.column.wave
+    pad = PadPlan.make(batch, first.column.p, block_b=block_b,
                        block_p=MAX_FUSED_P1, interpret=interpret)
     return NetworkPlan(
-        n_cols=l1.n_cols,
-        p1=l1.column.p, q1=l1.column.q, q2=l2.column.q,
-        theta1=l1.column.theta, theta2=l2.column.theta,
+        n_cols=first.n_cols,
+        ps=tuple(l.column.p for l in cfg.layers),
+        qs=tuple(l.column.q for l in cfg.layers),
+        thetas=tuple(l.column.theta for l in cfg.layers),
         T=spec.T, w_max=spec.w_max,
         pad=pad,
-        table1=l1.column.stdp.table_tuple(spec),
-        table2=l2.column.stdp.table_tuple(spec),
-        mus1=(l1.column.stdp.mu_capture, l1.column.stdp.mu_backoff,
-              l1.column.stdp.mu_search),
-        mus2=(l2.column.stdp.mu_capture, l2.column.stdp.mu_backoff,
-              l2.column.stdp.mu_search),
+        tables=tuple(l.column.stdp.table_tuple(spec) for l in cfg.layers),
+        mus=tuple((l.column.stdp.mu_capture, l.column.stdp.mu_backoff,
+                   l.column.stdp.mu_search) for l in cfg.layers),
     )

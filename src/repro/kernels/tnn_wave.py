@@ -1,20 +1,23 @@
 """Pallas TPU megakernel: one launch per gamma wave for the whole network.
 
 The paper's 7nm prototype processes a gamma wave as a single hardware
-pipeline — the layer-1 spike volley flows straight into the layer-2 columns
-without ever leaving the datapath. This kernel is the software analog
-(DESIGN.md §10): for each (column site, batch tile) grid cell it runs
+pipeline — each layer's spike volley flows straight into the next layer's
+columns without ever leaving the datapath. This kernel is the software
+analog (DESIGN.md §10, §11): for each (column site, batch tile) grid cell
+it runs the whole N-layer cascade
 
     layer-1 RNL accumulate + threshold + WTA        (the §2 A@N matmul)
       -> inter-layer spike volley, held in VMEM/registers
     layer-2 RNL accumulate + threshold + WTA
-      -> optional STDP-counter epilogue for BOTH layers
+      -> ... layer-N RNL accumulate + threshold + WTA
+      -> optional STDP-counter epilogue for EVERY layer
 
-so the intermediate ``(B, S, q1)`` volley never round-trips through HBM and
-the per-layer kernel chain (2 forward + 2 STDP ``pallas_call`` launches per
-wave) collapses to ONE launch. Same-site topology makes this embarrassingly
-column-parallel: site s of layer 2 reads only site s of layer 1, so the
-column axis is the leading grid dimension and no cross-site traffic exists.
+so no intermediate ``(B, S, q_i)`` volley ever round-trips through HBM and
+the per-layer kernel chain (N forward + N STDP ``pallas_call`` launches per
+wave) collapses to ONE launch at any depth. Same-site topology makes this
+embarrassingly column-parallel: site s of layer i+1 reads only site s of
+layer i, so the column axis is the leading grid dimension and no cross-site
+traffic exists.
 
 Grid: ``(n_cols, batch tiles)``; batch is the minor (sequential) dimension,
 so the per-column STDP counter scratch accumulates across batch tiles and
@@ -23,15 +26,18 @@ form sharded training psums over the mesh's "data" axis before one
 saturating apply, exactly like the per-layer path (DESIGN.md §9).
 
 Layout: arrays arrive column-major — x ``(C, Bp, p1p)``, weights
-``(C, p, q)``, uniforms ``(C, Bp, p, q)`` — matching the per-column RNG
-split the reference path draws, so the Bernoulli compares see identical
+``(C, p_i, q_i)``, uniforms ``(C, Bp, p_i, q_i)`` — matching the per-column
+RNG split the reference path draws, so the Bernoulli compares see identical
 bits and the whole wave is bit-exact with ``impl="direct"``.
 
 Geometry comes from a precomputed :class:`repro.kernels.padding.NetworkPlan`
 (static, hashable, lru-cached per config): the layer-1 synapse axis lives in
-a single tile (padded p1 <= ``MAX_FUSED_P1``), q1/q2 stay un-tiled in lanes
-(<= 128), and padding follows the package's no-op encodings (spikes=T,
-weights=0, uniforms=1.0).
+a single tile (padded p1 <= ``MAX_FUSED_P1``), every q_i stays un-tiled in
+lanes (<= 128) — which also bounds every deeper fan-in, since
+``p_{i+1} = q_i`` — and padding follows the package's no-op encodings
+(spikes=T, weights=0, uniforms=1.0). The per-layer loop below is a Python
+loop over the plan's static tuples, so the cascade unrolls at trace time:
+depth costs trace size, never launch count.
 """
 from __future__ import annotations
 
@@ -62,95 +68,79 @@ def _rnl_wta(x: jax.Array, w: jax.Array, *, T: int, theta: int) -> jax.Array:
 
 
 def _wave_kernel(
-    x_ref, w1_ref, w2_ref, *refs,
-    T: int, theta1: int, theta2: int, n_b_tiles: int, learn: bool,
-    w_max: int, table1, table2, mus1, mus2,
+    x_ref, *refs,
+    T: int, thetas: Tuple[int, ...], n_b_tiles: int, learn: bool,
+    w_max: int, tables, mus,
 ):
+    """The whole N-layer wave for one (column, batch-tile) grid cell.
+
+    ``refs`` layout (n = len(thetas) layers): n weight refs; then, when
+    learning, 2n uniform refs (up/dn interleaved per layer); then n z
+    output refs; then, when learning, n net output refs and n VMEM counter
+    scratch accumulators. The layer loop is unrolled at trace time from the
+    plan's static per-layer tuples."""
+    n = len(thetas)
+    w_refs, rest = refs[:n], refs[n:]
     if learn:
-        (u1u_ref, u1d_ref, u2u_ref, u2d_ref,
-         z1_ref, z2_ref, net1_ref, net2_ref,
-         net1_acc, net2_acc) = refs
-    else:
-        z1_ref, z2_ref = refs
-
-    x = x_ref[0].astype(jnp.int32)    # (Bt, p1p)
-    w1 = w1_ref[0].astype(jnp.int32)  # (p1p, q1)
-    w2 = w2_ref[0].astype(jnp.int32)  # (q1, q2)
-
-    # the whole wave, volley in registers/VMEM: no HBM round-trip between
-    # layers, no re-padding between stages.
-    z1 = _rnl_wta(x, w1, T=T, theta=theta1)   # (Bt, q1)
-    z2 = _rnl_wta(z1, w2, T=T, theta=theta2)  # (Bt, q2)
-    z1_ref[0] = z1
-    z2_ref[0] = z2
-
-    if learn:
+        u_refs, rest = rest[:2 * n], rest[2 * n:]
+        z_refs, net_refs, net_accs = rest[:n], rest[n:2 * n], rest[2 * n:]
         bt_idx = pl.program_id(1)
 
         @pl.when(bt_idx == 0)
         def _init():
-            net1_acc[...] = jnp.zeros_like(net1_acc)
-            net2_acc[...] = jnp.zeros_like(net2_acc)
+            for acc in net_accs:
+                acc[...] = jnp.zeros_like(acc)
+    else:
+        z_refs = rest
 
-        net1_acc[...] += stdp_net_tile(
-            w1, x, z1, u1u_ref[0], u1d_ref[0],
-            T=T, w_max=w_max, table=table1,
-            mu_capture=mus1[0], mu_backoff=mus1[1], mu_search=mus1[2])
-        net2_acc[...] += stdp_net_tile(
-            w2, z1, z2, u2u_ref[0], u2d_ref[0],
-            T=T, w_max=w_max, table=table2,
-            mu_capture=mus2[0], mu_backoff=mus2[1], mu_search=mus2[2])
+    # the whole wave, volleys in registers/VMEM: no HBM round-trip between
+    # layers, no re-padding between stages.
+    v = x_ref[0].astype(jnp.int32)        # (Bt, p1p)
+    for i in range(n):
+        w = w_refs[i][0].astype(jnp.int32)  # (p_i, q_i)
+        z = _rnl_wta(v, w, T=T, theta=thetas[i])  # (Bt, q_i)
+        z_refs[i][0] = z
+        if learn:
+            net_accs[i][...] += stdp_net_tile(
+                w, v, z, u_refs[2 * i][0], u_refs[2 * i + 1][0],
+                T=T, w_max=w_max, table=tables[i],
+                mu_capture=mus[i][0], mu_backoff=mus[i][1],
+                mu_search=mus[i][2])
+        v = z
 
+    if learn:
         @pl.when(bt_idx == n_b_tiles - 1)
         def _emit():
-            net1_ref[0] = net1_acc[...]
-            net2_ref[0] = net2_acc[...]
+            for net_ref, acc in zip(net_refs, net_accs):
+                net_ref[0] = acc[...]
 
 
 def _wave_pallas_call(plan: NetworkPlan, learn: bool):
     """Build the single-launch pallas_call for one gamma wave under ``plan``."""
-    C, bt, p1p = plan.n_cols, plan.pad.block_b, plan.pad.pp
+    C, bt = plan.n_cols, plan.pad.block_b
     bp, n_b = plan.pad.bp, plan.pad.n_b
-    q1, q2 = plan.q1, plan.q2
-    in_specs = [
-        pl.BlockSpec((1, bt, p1p), lambda c, b: (c, b, 0)),   # x
-        pl.BlockSpec((1, p1p, q1), lambda c, b: (c, 0, 0)),   # w1
-        pl.BlockSpec((1, q1, q2), lambda c, b: (c, 0, 0)),    # w2
-    ]
-    out_specs = [
-        pl.BlockSpec((1, bt, q1), lambda c, b: (c, b, 0)),    # z1
-        pl.BlockSpec((1, bt, q2), lambda c, b: (c, b, 0)),    # z2
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((C, bp, q1), jnp.int32),
-        jax.ShapeDtypeStruct((C, bp, q2), jnp.int32),
-    ]
+    pps, qs = plan.pps, plan.qs
+    in_specs = [pl.BlockSpec((1, bt, pps[0]), lambda c, b: (c, b, 0))]  # x
+    for pp, q in zip(pps, qs):  # per-layer weights
+        in_specs.append(pl.BlockSpec((1, pp, q), lambda c, b: (c, 0, 0)))
+    out_specs = [pl.BlockSpec((1, bt, q), lambda c, b: (c, b, 0))
+                 for q in qs]  # per-layer z
+    out_shape = [jax.ShapeDtypeStruct((C, bp, q), jnp.int32) for q in qs]
     scratch = []
     if learn:
-        in_specs += [
-            pl.BlockSpec((1, bt, p1p, q1), lambda c, b: (c, b, 0, 0)),  # u1_up
-            pl.BlockSpec((1, bt, p1p, q1), lambda c, b: (c, b, 0, 0)),  # u1_dn
-            pl.BlockSpec((1, bt, q1, q2), lambda c, b: (c, b, 0, 0)),   # u2_up
-            pl.BlockSpec((1, bt, q1, q2), lambda c, b: (c, b, 0, 0)),   # u2_dn
-        ]
-        out_specs += [
-            pl.BlockSpec((1, p1p, q1), lambda c, b: (c, 0, 0)),  # net1
-            pl.BlockSpec((1, q1, q2), lambda c, b: (c, 0, 0)),   # net2
-        ]
-        out_shape += [
-            jax.ShapeDtypeStruct((C, p1p, q1), jnp.int32),
-            jax.ShapeDtypeStruct((C, q1, q2), jnp.int32),
-        ]
-        scratch = [
-            pltpu.VMEM((p1p, q1), jnp.int32),
-            pltpu.VMEM((q1, q2), jnp.int32),
-        ]
+        for pp, q in zip(pps, qs):  # per-layer up/dn uniforms
+            u_spec = pl.BlockSpec((1, bt, pp, q), lambda c, b: (c, b, 0, 0))
+            in_specs += [u_spec, u_spec]
+        out_specs += [pl.BlockSpec((1, pp, q), lambda c, b: (c, 0, 0))
+                      for pp, q in zip(pps, qs)]  # per-layer net counters
+        out_shape += [jax.ShapeDtypeStruct((C, pp, q), jnp.int32)
+                      for pp, q in zip(pps, qs)]
+        scratch = [pltpu.VMEM((pp, q), jnp.int32) for pp, q in zip(pps, qs)]
     kernel = functools.partial(
         _wave_kernel,
-        T=plan.T, theta1=plan.theta1, theta2=plan.theta2,
+        T=plan.T, thetas=plan.thetas,
         n_b_tiles=n_b, learn=learn, w_max=plan.w_max,
-        table1=plan.table1, table2=plan.table2,
-        mus1=plan.mus1, mus2=plan.mus2,
+        tables=plan.tables, mus=plan.mus,
     )
     return pl.pallas_call(
         kernel,
@@ -163,60 +153,62 @@ def _wave_pallas_call(plan: NetworkPlan, learn: bool):
     )
 
 
-def _prep_inputs(x, w1, w2, plan: NetworkPlan):
+def _prep_inputs(x, params, plan: NetworkPlan):
     """Apply the plan's no-op pad encodings once and go column-major.
     Inputs are widened to i32 before the launch — the same contract the
-    raw per-layer kernels use (int8 VMEM tiles are Mosaic-fragile)."""
+    raw per-layer kernels use (int8 VMEM tiles are Mosaic-fragile). Only
+    the input-facing synapse axis needs padding; deeper weights already
+    match the in-VMEM volley extents."""
     pad = plan.pad
     x = pad.pad_spikes(x, plan.T, b_axis=0, p_axis=2)       # (Bp, C, p1p)
     xT = x.transpose(1, 0, 2).astype(jnp.int32)             # (C, Bp, p1p)
-    w1 = pad.pad_weights(w1, p_axis=1).astype(jnp.int32)    # (C, p1p, q1)
-    return xT, w1, w2.astype(jnp.int32)
+    ws = [pad.pad_weights(params[0], p_axis=1).astype(jnp.int32)]
+    ws += [w.astype(jnp.int32) for w in params[1:]]
+    return [xT] + ws
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
 def wave_forward(
-    x: jax.Array, w1: jax.Array, w2: jax.Array, *, plan: NetworkPlan
-) -> Tuple[jax.Array, jax.Array]:
-    """One fused forward gamma wave. x (B, C, p1) ints; w1 (C, p1, q1);
-    w2 (C, q1, q2). Returns post-WTA spike times (z1 (B, C, q1),
-    z2 (B, C, q2)) i32 — bit-exact with the per-layer backends."""
-    xT, w1, w2 = _prep_inputs(x, w1, w2, plan)
-    z1t, z2t = _wave_pallas_call(plan, learn=False)(xT, w1, w2)
+    x: jax.Array, params: Tuple[jax.Array, ...], *, plan: NetworkPlan
+) -> Tuple[jax.Array, ...]:
+    """One fused forward gamma wave through the whole cascade. x (B, C, p1)
+    ints; params = per-layer weights (w_i (C, p_i, q_i)). Returns the
+    per-layer post-WTA spike times (z_i (B, C, q_i)) i32 — bit-exact with
+    the per-layer backends at any depth."""
+    zs = _wave_pallas_call(plan, learn=False)(*_prep_inputs(x, params, plan))
     B = plan.pad.b
-    return z1t.transpose(1, 0, 2)[:B], z2t.transpose(1, 0, 2)[:B]
+    return tuple(z.transpose(1, 0, 2)[:B] for z in zs)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
 def wave_train(
     x: jax.Array,
-    w1: jax.Array,
-    w2: jax.Array,
-    u1_up: jax.Array,
-    u1_dn: jax.Array,
-    u2_up: jax.Array,
-    u2_dn: jax.Array,
+    params: Tuple[jax.Array, ...],
+    uniforms: Tuple[Tuple[jax.Array, jax.Array], ...],
     *,
     plan: NetworkPlan,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One fused learning gamma wave: forward through both layers PLUS the
-    STDP-counter epilogue, one launch.
+) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...]]:
+    """One fused learning gamma wave: forward through every layer PLUS the
+    per-layer STDP-counter epilogue, one launch at any depth.
 
-    u*_up/u*_dn: (C, B, p, q) per-column uniforms — the same draws (same
-    per-layer/per-column key split) the reference path makes, passed in
-    explicitly so the update is a deterministic, oracle-checkable function.
-    Returns (z1, z2, net1, net2): post-WTA spike times per layer and the
-    PRE-CLIP batch-summed counter deltas (``out="net"`` semantics,
-    DESIGN.md §9) — deltas from disjoint batch shards sum (psum) before one
-    saturating ``apply_net``, so sharded training stays bit-identical."""
+    uniforms: per-layer ``(u_up, u_dn)`` pairs, each (C, B, p_i, q_i) — the
+    same draws (same per-layer/per-column key split) the reference path
+    makes, passed in explicitly so the update is a deterministic,
+    oracle-checkable function. Returns ``(zs, nets)``: per-layer post-WTA
+    spike times and the PRE-CLIP batch-summed counter deltas (``out="net"``
+    semantics, DESIGN.md §9) — deltas from disjoint batch shards sum (psum)
+    before one saturating ``apply_net``, so sharded training stays
+    bit-identical."""
     pad = plan.pad
-    xT, w1, w2 = _prep_inputs(x, w1, w2, plan)
-    u1_up = pad.pad_uniforms(u1_up, b_axis=1, p_axis=2)
-    u1_dn = pad.pad_uniforms(u1_dn, b_axis=1, p_axis=2)
-    u2_up = pad.pad_uniforms(u2_up, b_axis=1)
-    u2_dn = pad.pad_uniforms(u2_dn, b_axis=1)
-    z1t, z2t, net1, net2 = _wave_pallas_call(plan, learn=True)(
-        xT, w1, w2, u1_up, u1_dn, u2_up, u2_dn)
+    inputs = _prep_inputs(x, params, plan)
+    for i, (uu, ud) in enumerate(uniforms):
+        p_axis = 2 if i == 0 else None  # only layer 1's fan-in is padded
+        inputs.append(pad.pad_uniforms(uu, b_axis=1, p_axis=p_axis))
+        inputs.append(pad.pad_uniforms(ud, b_axis=1, p_axis=p_axis))
+    outs = _wave_pallas_call(plan, learn=True)(*inputs)
+    n = plan.n_layers
+    zs, nets = outs[:n], outs[n:]
     B, p1 = pad.b, pad.p
-    return (z1t.transpose(1, 0, 2)[:B], z2t.transpose(1, 0, 2)[:B],
-            net1[:, :p1], net2)
+    zs = tuple(z.transpose(1, 0, 2)[:B] for z in zs)
+    nets = (nets[0][:, :p1],) + tuple(nets[1:])
+    return zs, nets

@@ -54,9 +54,7 @@ def serve_lm(args: argparse.Namespace) -> None:
 
 
 def serve_tnn(args: argparse.Namespace) -> None:
-    from repro.configs.tnn_mnist import (
-        crop_field, default_thetas, network_config,
-    )
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
     from repro.core import init_network, network_train_wave, encode_images
     from repro.data.mnist_like import digits
     from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
@@ -66,9 +64,8 @@ def serve_tnn(args: argparse.Namespace) -> None:
     n_slots = args.slots
     if n_slots % mesh.shape.get("data", 1):
         n_slots = mesh.shape["data"] * max(n_slots // mesh.shape["data"], 1)
-    theta1, theta2 = default_thetas(args.sites)
-    cfg = network_config(sites=args.sites, theta1=theta1, theta2=theta2,
-                         impl=args.impl)
+    cfg = launcher_network_config(args.sites, depth=args.depth,
+                                  impl=args.impl)
     print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
           f"on {describe(mesh)}")
     if args.from_ckpt:
@@ -116,6 +113,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     # tnn-mnist options
     ap.add_argument("--sites", type=int, default=64)
+    ap.add_argument("--depth", type=int, default=2,
+                    help="cascade depth: 2 = the paper prototype, other "
+                         "depths build the deep_config N-layer cascade "
+                         "(DESIGN.md §11; must match the training --depth)")
     ap.add_argument("--impl", default="pallas",
                     choices=("direct", "matmul", "pallas", "fused"),
                     help="execution backend; 'fused' = one Pallas launch "

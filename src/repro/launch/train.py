@@ -37,15 +37,11 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 def train_tnn(args: argparse.Namespace) -> None:
     """Wave-batched online STDP over the prototype (DESIGN.md §9)."""
-    from repro.configs.tnn_mnist import (
-        default_thetas, network_config, train_config,
-    )
+    from repro.configs.tnn_mnist import launcher_network_config, train_config
     from repro.train.tnn_trainer import TNNTrainer
 
     sites = 16 if args.smoke and args.sites == 625 else args.sites
-    theta1, theta2 = default_thetas(sites)
-    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
-                         impl=args.impl)
+    cfg = launcher_network_config(sites, depth=args.depth, impl=args.impl)
     mesh = make_host_mesh()
     ckpt_dir = args.ckpt_dir or "/tmp/repro_tnn_ckpt"
     tcfg = train_config(
@@ -88,6 +84,10 @@ def main() -> None:
                     choices=("direct", "matmul", "pallas", "fused"),
                     help="execution backend; 'fused' = one Pallas launch "
                          "per gamma wave (DESIGN.md §10)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="cascade depth: 2 = the paper prototype, other "
+                         "depths build the deep_config N-layer cascade "
+                         "(DESIGN.md §11; serve with the same --depth)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="waves between vote-table evals (0 = epoch ends)")
     ap.add_argument("--ckpt-every", type=int, default=0,

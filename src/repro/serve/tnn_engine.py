@@ -60,8 +60,9 @@ class TNNEngine:
             Must be a multiple of the mesh's "data" axis size.
         impl: execution backend for serving ("pallas" routes every layer
             through repro.kernels.ops; "fused" classifies each wave in ONE
-            megakernel launch via repro.kernels.tnn_wave, DESIGN.md §10;
-            "direct"/"matmul" are the references).
+            megakernel launch via repro.kernels.tnn_wave — at any cascade
+            depth, DESIGN.md §10, §11; "direct"/"matmul" are the
+            references).
         mesh: optional ``Mesh`` with a "data" axis for data-parallel
             sharding of the slot axis; ``None`` serves unsharded.
     """

@@ -10,8 +10,11 @@ silicon applies them — so its trainer drives gamma waves instead:
   is ``shard_map``-sharded over "data" like ``TNNEngine``; the counters are
   psum'd, so the learned weights are device-count invariant. The network
   config's ``impl`` picks the backend — ``impl="fused"`` collapses the
-  whole wave (both layers' forward + STDP counters) into ONE Pallas launch
-  (DESIGN.md §10) and trains bit-identically to every other backend.
+  whole wave (every layer's forward + STDP counters) into ONE Pallas
+  launch (DESIGN.md §10, §11) and trains bit-identically to every other
+  backend. The loop is depth-agnostic: the 2-layer prototype and the
+  N-layer ``configs.tnn_mnist.deep_config`` cascades train through the
+  same step, stream, and checkpoint protocol.
 * **deterministic stream** — :class:`WaveStream` generates + encodes the
   (reduced) training set once; ``batch_at(wave)`` is a pure function of the
   wave counter, so resume-and-replay is exact (same contract as

@@ -1,0 +1,40 @@
+"""Jaxpr inspection helpers shared by benchmarks and tests.
+
+:func:`pallas_launch_count` is the metric the fused wave executor moves
+(DESIGN.md §10, §11): the per-layer pallas backend issues 2N kernel
+launches per learning wave of an N-layer cascade (N forward + N STDP),
+``impl="fused"`` issues exactly ONE at any depth. Benchmarks report it
+(``benchmarks/run.py``) and the parity tests assert it
+(``tests/test_fused_wave.py``, ``tests/test_topology_properties.py``).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+def pallas_launch_count(fn: Callable, *args, **kwargs) -> int:
+    """Count ``pallas_call`` equations in ``fn``'s jaxpr (recursing through
+    pjit/scan/vmap sub-jaxprs) — the number of kernel launches one call
+    issues. vmapped/grid-extended calls count once: they ARE one launch."""
+
+    def walk_param(v) -> int:
+        if isinstance(v, (list, tuple)):
+            return sum(walk_param(x) for x in v)
+        if hasattr(v, "jaxpr"):   # ClosedJaxpr
+            return walk(v.jaxpr)
+        if hasattr(v, "eqns"):    # Jaxpr
+            return walk(v)
+        return 0
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                n += walk_param(v)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)

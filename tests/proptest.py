@@ -1,21 +1,52 @@
 """Minimal property-based testing helper (hypothesis is not installed in the
 offline container — DESIGN.md §8). Seeded random case generation with
-failure reporting; shrinking is approximated by sorting cases small-first."""
+failure reporting; shrinking is approximated by sorting cases small-first.
+
+Besides the generic strategies, this module is the randomized-TOPOLOGY
+harness for the N-layer fused wave executor (DESIGN.md §11): sample a
+cascade of depth 1-4 with heterogeneous, non-8-aligned site counts,
+fan-ins, and per-layer thetas from a seeded generator
+(:func:`topology_specs`), build the network (:func:`build_network`), and
+assert bit-exact spike-time AND post-STDP weight parity across the
+``direct``/``pallas``/``fused`` backends — including the per-layer
+fallback path when a sampled topology is not fused-capable
+(:func:`assert_cross_impl_parity`). ``tests/test_topology_properties.py``
+drives it under pytest; CI additionally runs it as a dedicated step with a
+fixed seed (``PROPTEST_SEED``) and a randomized budget
+(``PROPTEST_CASES``).
+"""
 from __future__ import annotations
 
-import functools
-import itertools
-from typing import Callable, Dict, Iterable, Sequence
+import os
+from typing import Callable, Optional
 
 import numpy as np
 
 
-def cases(n: int = 25, seed: int = 0, **strategies: Callable[[np.random.Generator], object]):
+def env_budget(default_n: int) -> int:
+    """Case budget for the randomized suites: ``PROPTEST_CASES`` overrides
+    the per-test default (the CI property-test step sets it explicitly)."""
+    return int(os.environ.get("PROPTEST_CASES", default_n))
+
+
+def env_seed(default_seed: int = 0) -> int:
+    """Base seed for the randomized suites, overridable via
+    ``PROPTEST_SEED`` so a CI failure is reproducible locally."""
+    return int(os.environ.get("PROPTEST_SEED", default_seed))
+
+
+def cases(n: Optional[int] = None, seed: Optional[int] = None,
+          **strategies: Callable[[np.random.Generator], object]):
     """Decorator: run the test for ``n`` random draws of each strategy kwarg.
 
     A strategy is ``fn(rng) -> value``. The wrapped test receives the drawn
     values as keyword arguments; failures report the failing draw index/seed.
+    ``n``/``seed`` default to the ``PROPTEST_CASES``/``PROPTEST_SEED``
+    environment knobs (falling back to 25 and 0), so one CI step can pin
+    the seed and raise the budget without touching the tests.
     """
+    n = env_budget(25) if n is None else n
+    seed = env_seed() if seed is None else seed
 
     def deco(test):
         def wrapper():
@@ -59,3 +90,122 @@ def array_ints(shape_fn, lo, hi, dtype=np.int32):
 
 def one_of(*vals):
     return lambda rng: vals[int(rng.integers(0, len(vals)))]
+
+
+# -- randomized N-layer topologies (DESIGN.md §11) ----------------------------
+#
+# Specs are plain dicts (this module stays importable without jax); the
+# builders below import repro lazily. Extents are deliberately small — on
+# CPU every pallas/fused launch runs in interpret mode — and deliberately
+# ugly: odd batches, non-8-aligned fan-ins, q < 8, mixed per-layer thetas.
+
+
+def topology_specs(max_depth: int = 4, allow_unfusable: bool = True):
+    """Strategy: one random cascade spec per draw — depth 1..``max_depth``,
+    non-8-aligned site count / fan-in, heterogeneous per-layer widths and
+    thetas, T in {8, 16}. With ``allow_unfusable`` a third of the draws
+    break the fused topology contract (a mismatched deeper wave spec), so
+    the property also exercises the per-layer fallback path."""
+
+    def strat(rng: np.random.Generator):
+        depth = int(rng.integers(1, max_depth + 1))
+        p1 = int(rng.integers(2, 34))
+        qs = [int(rng.integers(2, 12)) for _ in range(depth)]
+        # theta must be reachable: the max body potential of a layer with
+        # fan-in p is p * w_max (w_max = 7 for the specs build_network
+        # makes), and ColumnConfig.validate rejects anything above it
+        thetas, p = [], p1
+        for q in qs:
+            thetas.append(int(rng.integers(1, min(4 * q, 7 * p) + 1)))
+            p = q
+        spec = {
+            "C": int(rng.integers(1, 6)),
+            "p1": p1,
+            "qs": tuple(qs),
+            "thetas": tuple(thetas),
+            "T": int(rng.choice([8, 16])),
+            "B": int(rng.integers(1, 8)),
+            "seed": int(rng.integers(0, 2**31)),
+            # break the shared-wave-spec contract on a deeper layer -> the
+            # topology is not fused-capable and must take the fallback path
+            "break_wave_at": (int(rng.integers(1, depth))
+                              if allow_unfusable and depth > 1
+                              and rng.random() < 1 / 3 else None),
+        }
+        return spec
+
+    return strat
+
+
+def build_network(spec):
+    """Materialize a :func:`topology_specs` draw as a ``NetworkConfig``
+    (impl="direct"; rebind with ``with_impl``)."""
+    from repro.core import (
+        ColumnConfig, LayerConfig, NetworkConfig, WaveSpec, with_impl,
+    )
+
+    time_bits = {8: 3, 16: 4}[spec["T"]]
+    layers, p = [], spec["p1"]
+    for i, (q, theta) in enumerate(zip(spec["qs"], spec["thetas"])):
+        wave = WaveSpec(time_bits=time_bits + 1
+                        if i == spec["break_wave_at"] else time_bits)
+        layers.append(LayerConfig(
+            spec["C"], ColumnConfig(p=p, q=q, theta=theta, wave=wave)))
+        p = q
+    return with_impl(NetworkConfig(layers=tuple(layers)), "direct")
+
+
+def assert_cross_impl_parity(spec, train: bool = True):
+    """The property itself: for one sampled topology, the post-WTA spike
+    times of every layer AND (when ``train``) the post-STDP weights are
+    bit-exact across ``direct``/``pallas``/``fused`` — via the megakernel
+    when the topology is fused-capable, via the per-layer fallback when it
+    is not — and a fused-capable cascade issues exactly ONE kernel launch
+    per gamma wave at any depth."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        init_network, network_forward, network_train_step,
+        network_train_wave, with_impl,
+    )
+    from repro.kernels.padding import fused_wave_capable
+    from repro.utils.tracing import pallas_launch_count
+
+    ref = build_network(spec)
+    params = init_network(jax.random.PRNGKey(spec["seed"]), ref)
+    T = ref.layers[0].column.wave.T
+    x = jax.random.randint(
+        jax.random.PRNGKey(spec["seed"] ^ 0x5EED),
+        (spec["B"], spec["C"], spec["p1"]), 0, T + 1, jnp.int8)
+    capable = fused_wave_capable(ref)
+    assert capable == (spec["break_wave_at"] is None), spec
+
+    zs_ref = network_forward(x, params, ref)
+    k = jax.random.PRNGKey(spec["seed"] ^ 0x7A7E)
+    if train:
+        outs_ref, params_ref = network_train_wave(x, params, ref, k)
+    for impl in ("pallas", "fused"):
+        icfg = with_impl(ref, impl)
+        zs = network_forward(x, params, icfg)
+        for a, b in zip(zs_ref, zs):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert b.dtype == a.dtype
+        if not train:
+            continue
+        outs_w, params_w = network_train_wave(x, params, icfg, k)
+        outs_s, params_s = network_train_step(x, params, icfg, k)
+        for a, b, c in zip(outs_ref, outs_w, outs_s):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        for a, b, c in zip(params_ref, params_w, params_s):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    if capable:
+        fused = with_impl(ref, "fused")
+        assert pallas_launch_count(
+            lambda xb: network_forward(xb, params, fused), x) == 1
+        if train:
+            assert pallas_launch_count(
+                lambda xb, kk: network_train_wave(xb, params, fused, kk)[1],
+                x, k) == 1

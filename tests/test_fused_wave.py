@@ -1,8 +1,9 @@
-"""The whole-network fused wave executor (impl="fused", DESIGN.md §10):
-bit-exact parity with direct/matmul/pallas across a non-8-aligned shape
-grid (forward AND learned weights), single-launch dispatch assertions,
-topology fallback to the per-layer path, and the PadPlan/NetworkPlan
-geometry contract."""
+"""The whole-network fused wave executor (impl="fused", DESIGN.md §10,
+§11): bit-exact parity with direct/matmul/pallas across a non-8-aligned
+shape grid (forward AND learned weights), single-launch dispatch
+assertions, topology fallback to the per-layer path, and the
+PadPlan/NetworkPlan geometry contract. Randomized N-layer topologies are
+covered by tests/test_topology_properties.py."""
 import dataclasses
 
 import jax
@@ -158,12 +159,28 @@ def test_seq_reduce_keeps_per_layer_path(monkeypatch):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_non_capable_topology_falls_back():
-    """Networks outside the 2-layer same-site topology still run under
-    impl="fused" — as per-layer pallas launches — and match direct."""
+def test_deeper_chain_is_now_capable():
+    """A 3-layer same-site chain is INSIDE the generalized topology
+    contract (DESIGN.md §11) and runs as one launch."""
     base = _net(4, 12, 6, 5, 8, 6, 2)
     third = LayerConfig(4, ColumnConfig(
         p=5, q=3, theta=2, wave=base.layers[0].column.wave))
+    deep = NetworkConfig(layers=base.layers + (third,))
+    assert padding.fused_wave_capable(deep)
+    params = init_network(jax.random.PRNGKey(0), deep)
+    x = _x(deep, 5)
+    zf = network_forward(x, params, with_impl(deep, "fused"))
+    for a, b in zip(network_forward(x, params, deep), zf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_non_capable_topology_falls_back():
+    """Networks outside the same-site chain topology (here: a deeper layer
+    on a different wave spec) still run under impl="fused" — as per-layer
+    pallas launches — and match direct."""
+    base = _net(4, 12, 6, 5, 8, 6, 2)
+    third = LayerConfig(4, ColumnConfig(
+        p=5, q=3, theta=2, wave=WaveSpec(time_bits=4)))
     ref = NetworkConfig(layers=base.layers + (third,))
     assert not padding.fused_wave_capable(ref)
     params = init_network(jax.random.PRNGKey(0), ref)
@@ -225,6 +242,10 @@ def test_network_plan_cached_and_static():
     a = padding.network_plan(cfg, 8)
     assert a is padding.network_plan(cfg, 8)  # lru-cached on the config
     assert a != padding.network_plan(cfg, 16)
-    assert (a.p1, a.q1, a.q2, a.n_cols) == (10, 5, 4, 3)
+    assert (a.ps, a.qs, a.n_cols) == ((10, 5), (5, 4), 3)
+    assert a.n_layers == 2
     assert a.pad.pp == 16  # p1=10 -> 8-aligned 16, single tile
+    # only the input-facing synapse axis is padded; deeper fan-ins are
+    # in-VMEM volleys at logical extent
+    assert a.pps == (16, 5)
     hash(a)  # must stay hashable: it rides through jit as a static arg

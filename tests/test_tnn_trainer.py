@@ -156,6 +156,41 @@ def test_trainer_checkpoint_resume_bitexact_fused(tmp_path):
     _assert_states_equal(sa, sc)
 
 
+def test_three_layer_cascade_trains_and_serves_end_to_end(tmp_path):
+    """N-layer configs work end to end (DESIGN.md §11): a 3-layer
+    deep_config trains under the single-launch fused executor, checkpoints,
+    warm-starts a fused serving engine, and the trained state is
+    bit-identical to the direct backend's."""
+    from repro.configs.tnn_mnist import deep_config
+
+    cfg = deep_config(sites=SITES, widths=(12, 9, 5), thetas=(6, 3, 2),
+                      impl="fused")
+    dir_f = str(tmp_path / "fused")
+    out = TNNTrainer(cfg, _tcfg(dir_f, epochs=1)).run()
+    assert out["final_wave"] == 4
+
+    sf, ef = restore_tnn(Checkpointer(dir_f), cfg)
+    assert sorted(sf["params"]) == ["layer_00", "layer_01", "layer_02"]
+    assert ef["has_vote"]
+
+    # backend-invariance at depth 3: direct-trained == fused-trained
+    dir_d = str(tmp_path / "direct")
+    cfg_d = deep_config(sites=SITES, widths=(12, 9, 5), thetas=(6, 3, 2))
+    TNNTrainer(cfg_d, _tcfg(dir_d, epochs=1)).run()
+    sd, _ = restore_tnn(Checkpointer(dir_d), cfg_d)
+    _assert_states_equal(sf, sd)
+
+    # fused serving from the 3-layer checkpoint
+    eng = TNNEngine.from_checkpoint(dir_f, cfg, n_slots=4, impl="fused")
+    imgs, _ = digits(4, seed=11)
+    imgs = crop_field(imgs, SITES)
+    for uid in range(4):
+        eng.submit(ClassifyRequest(uid=uid, image=imgs[uid]))
+    done = eng.run_until_done()
+    assert sorted(done) == [0, 1, 2, 3]
+    assert all(0 <= done[u].result < cfg.n_classes for u in done)
+
+
 def test_engine_warm_start_matches_fit_engine(tmp_path):
     """A TNNEngine restored from a training checkpoint classifies exactly
     like the pre-save engine fit on the same labelled set."""

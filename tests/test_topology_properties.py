@@ -1,0 +1,188 @@
+"""Randomized-topology properties of the N-layer fused wave executor
+(DESIGN.md §11), driven by the tests/proptest.py harness: cross-impl
+bit-exactness over sampled depth-1..4 cascades with heterogeneous,
+non-8-aligned geometries (including the per-layer fallback when a draw is
+not fused-capable), single-launch guarantees per depth, N-layer checkpoint
+fingerprint refusals, params-tree round-trips for N != 2, and the
+encode_images wave-spec validation.
+
+CI runs this module as a dedicated step with a fixed seed and a raised
+randomized budget (``PROPTEST_SEED`` / ``PROPTEST_CASES``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import (
+    assert_cross_impl_parity,
+    build_network,
+    cases,
+    env_budget,
+    topology_specs,
+)
+from repro.checkpoint import (
+    Checkpointer,
+    restore_tnn,
+    tnn_abstract_state,
+    tnn_config_fingerprint,
+)
+from repro.configs.tnn_mnist import deep_config, network_config
+from repro.core import (
+    encode_images,
+    init_network,
+    init_train_state,
+    input_wave_spec,
+    network_forward,
+    network_train_wave,
+    params_from_tree,
+    params_to_tree,
+    with_impl,
+)
+from repro.kernels.padding import fused_wave_capable
+from repro.utils.tracing import pallas_launch_count
+
+
+@cases(n=env_budget(8), spec=topology_specs(max_depth=4))
+def test_randomized_topology_parity(spec):
+    """THE property: for any sampled cascade (depth 1-4, odd extents,
+    heterogeneous thetas, fusable or not), spike times and post-STDP
+    weights are bit-exact across direct/pallas/fused, and fused-capable
+    draws run as ONE launch per gamma wave."""
+    assert_cross_impl_parity(spec, train=True)
+
+
+@cases(n=env_budget(4), spec=topology_specs(max_depth=4,
+                                            allow_unfusable=False))
+def test_randomized_topology_forward_parity(spec):
+    """Forward-only slice of the property — cheap extra coverage of the
+    fused-capable region (serving has no STDP epilogue)."""
+    assert_cross_impl_parity(spec, train=False)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 4])
+def test_fused_single_launch_at_every_depth(depth):
+    """The launch-count invariant the generalization is for: one
+    ``pallas_call`` per gamma wave at ANY fused-capable depth (and 2N for
+    the per-layer pallas path, pinning what fusion saves)."""
+    spec = {"C": 2, "p1": 9, "qs": tuple(range(6, 6 - depth, -1)),
+            "thetas": (5,) * depth, "T": 8, "B": 3, "seed": depth,
+            "break_wave_at": None}
+    ref = build_network(spec)
+    assert fused_wave_capable(ref)
+    params = init_network(jax.random.PRNGKey(depth), ref)
+    x = jax.random.randint(jax.random.PRNGKey(1), (3, 2, 9), 0, 9, jnp.int8)
+    k = jax.random.PRNGKey(2)
+    fused = with_impl(ref, "fused")
+    pallas = with_impl(ref, "pallas")
+    assert pallas_launch_count(
+        lambda xb: network_forward(xb, params, fused), x) == 1
+    assert pallas_launch_count(
+        lambda xb, kk: network_train_wave(xb, params, fused, kk)[1], x, k) == 1
+    assert pallas_launch_count(
+        lambda xb, kk: network_train_wave(xb, params, pallas, kk)[1],
+        x, k) == 2 * depth
+
+
+def test_deep_config_factory():
+    """deep_config builds a fused-capable N-layer cascade whose input layer
+    matches the on/off patch front end, with one theta per layer."""
+    cfg = deep_config(sites=4, widths=(12, 9, 5), thetas=(6, 3, 2))
+    assert [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers] == \
+        [(4, 32, 12), (4, 12, 9), (4, 9, 5)]
+    assert fused_wave_capable(cfg)
+    assert input_wave_spec(cfg) == cfg.layers[0].column.wave
+    # defaults: 3-layer prototype variant, launcher-convention thetas
+    full = deep_config()
+    assert [l.column.q for l in full.layers] == [12, 12, 10]
+    assert [l.column.theta for l in full.layers] == [24, 8, 8]
+    with pytest.raises(ValueError, match="layer width"):
+        deep_config(sites=4, widths=())
+    with pytest.raises(ValueError, match="thetas"):
+        deep_config(sites=4, widths=(12, 9), thetas=(6,))
+
+
+def test_params_tree_roundtrip_non_two_depths():
+    """params_to_tree/params_from_tree must round-trip at N != 2 (the
+    checkpoint export form is depth-agnostic)."""
+    for widths in ((5,), (12, 9, 5), (12, 9, 7, 5)):
+        cfg = deep_config(sites=4, widths=widths,
+                          thetas=(6,) * len(widths))
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        tree = params_to_tree(params)
+        assert sorted(tree) == [f"layer_{i:02d}" for i in range(len(widths))]
+        for a, b in zip(params, params_from_tree(tree, cfg)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # a deeper config refuses a shallower tree (missing leaf) ...
+        deeper = deep_config(sites=4, widths=widths + (3,),
+                             thetas=(6,) * (len(widths) + 1))
+        with pytest.raises(KeyError, match="missing"):
+            params_from_tree(tree, deeper)
+        # ... and a per-layer geometry mismatch refuses wrong shapes
+        bad = dict(tree, layer_00=tree["layer_00"][:, :-1])
+        with pytest.raises(ValueError, match="shape"):
+            params_from_tree(bad, cfg)
+        ab = tnn_abstract_state(cfg)
+        assert len(ab["params"]) == len(widths)
+
+
+def test_restore_refuses_different_depth_or_geometry(tmp_path):
+    """Negative checkpoint tests: an N-layer checkpoint must be refused by
+    the config-fingerprint check when restored into a config of different
+    DEPTH or different per-layer geometry — before any array is loaded."""
+    cfg3 = deep_config(sites=4, widths=(12, 9, 5), thetas=(6, 3, 2))
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    state = init_train_state(jax.random.PRNGKey(0), cfg3)
+    state["vote_table"] = jnp.zeros((4, 5, cfg3.n_classes), jnp.float32)
+    ckpt.save(1, state, extra={"config": tnn_config_fingerprint(cfg3)})
+
+    # same config restores fine
+    restored, _ = restore_tnn(ckpt, cfg3)
+    assert sorted(restored["params"]) == ["layer_00", "layer_01", "layer_02"]
+
+    # different depth: the 2-layer prototype at the same sites
+    cfg2 = network_config(sites=4, theta1=6, theta2=2)
+    with pytest.raises(ValueError, match="fresh directory"):
+        restore_tnn(ckpt, cfg2)
+
+    # same depth, different per-layer geometry (one width changed)
+    cfg3b = deep_config(sites=4, widths=(12, 8, 5), thetas=(6, 3, 2))
+    with pytest.raises(ValueError, match="fresh directory"):
+        restore_tnn(ckpt, cfg3b)
+
+    # same depth + geometry, different theta (dynamics mismatch)
+    cfg3c = deep_config(sites=4, widths=(12, 9, 5), thetas=(6, 4, 2))
+    with pytest.raises(ValueError, match="fresh directory"):
+        restore_tnn(ckpt, cfg3c)
+
+    # fingerprints are one segment per layer, so depth is part of identity
+    assert tnn_config_fingerprint(cfg3).count(";") == 2
+    assert tnn_config_fingerprint(cfg2).count(";") == 1
+
+
+def test_encode_images_rejects_mismatched_wave_spec():
+    """Regression: encode_images must refuse a cascade whose layers
+    disagree on the wave spec instead of silently encoding against
+    cfg.layers[0] (the readout would then decode under a different T)."""
+    cfg = deep_config(sites=4, widths=(12, 9), thetas=(6, 3))
+    imgs = jnp.zeros((2, *cfg.image_hw), jnp.float32)
+    encode_images(imgs, cfg)  # consistent cascade encodes fine
+
+    from repro.core import WaveSpec
+    broken = dataclasses.replace(cfg, layers=(
+        cfg.layers[0],
+        dataclasses.replace(cfg.layers[1], column=dataclasses.replace(
+            cfg.layers[1].column, wave=WaveSpec(time_bits=4))),
+    ))
+    with pytest.raises(ValueError, match="wave spec"):
+        encode_images(imgs, broken)
+    # ... and a front end whose fan-in cannot come from the patch encoder
+    narrow = dataclasses.replace(cfg, layers=(
+        dataclasses.replace(cfg.layers[0], column=dataclasses.replace(
+            cfg.layers[0].column, p=16)),
+        cfg.layers[1],
+    ))
+    with pytest.raises(ValueError, match="fan-in"):
+        encode_images(imgs, narrow)

@@ -16,6 +16,12 @@ Three checks, all run by CI next to the tier-1 pytest run:
    ``ColumnConfig.IMPLS`` — a backend that exists but isn't launchable (or
    a launcher flag naming a removed backend) is doc drift of the
    executable kind.
+4. **§11 anchors + the deep-config factory.** DESIGN.md §11 (the N-layer
+   fused wave) must keep its three anchor topics — plan layout, VMEM
+   scratch sizing, fallback rules — and the ``deep_config`` factory it
+   documents must exist in ``configs/tnn_mnist.py`` AND be shown in the
+   README (the N-layer quickstart), so neither the section nor the entry
+   point can silently drift away from the other.
 
 Run from the repo root:
 
@@ -105,6 +111,42 @@ def check_launcher_impls(root: pathlib.Path) -> list:
     return problems
 
 
+# §11 is the N-layer fused-wave section; these topics are its contract
+# with the code (kernels/padding.py, kernels/tnn_wave.py) and must stay.
+SECTION11_ANCHORS = ("plan layout", "vmem scratch", "fallback rules")
+DEEP_FACTORY = "deep_config"
+
+
+def check_section11_and_factory(root: pathlib.Path) -> list:
+    """DESIGN.md §11 must exist with its anchor topics, and the
+    ``deep_config`` factory it documents must be defined in
+    ``configs/tnn_mnist.py`` and shown in README.md."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§11\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append("DESIGN.md: no §11 section (N-layer fused wave)")
+    else:
+        # the heading itself names the topics, so search only the body —
+        # otherwise deleting the actual paragraphs would still pass
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION11_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §11: missing anchor topic {anchor!r}")
+    cfg_src = (root / "src" / "repro" / "configs" / "tnn_mnist.py").read_text()
+    if f"def {DEEP_FACTORY}(" not in cfg_src:
+        problems.append(
+            f"configs/tnn_mnist.py: no {DEEP_FACTORY}() factory (DESIGN.md "
+            f"§11 documents it)")
+    if DEEP_FACTORY not in (root / "README.md").read_text():
+        problems.append(
+            f"README.md: never mentions {DEEP_FACTORY} — the N-layer "
+            f"quickstart must show the factory")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -129,8 +171,9 @@ def main() -> int:
 
     backend_problems = check_readme_backends(root)
     launcher_problems = check_launcher_impls(root)
+    s11_problems = check_section11_and_factory(root)
 
-    if dangling or backend_problems or launcher_problems:
+    if dangling or backend_problems or launcher_problems or s11_problems:
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -143,11 +186,15 @@ def main() -> int:
             print("check_docs: launcher --impl problems:", file=sys.stderr)
             for p in launcher_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s11_problems:
+            print("check_docs: §11 / deep_config problems:", file=sys.stderr)
+            for p in s11_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
           f"names only accepted impls; launcher --impl choices match "
-          f"ColumnConfig.IMPLS")
+          f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact")
     return 0
 
 
