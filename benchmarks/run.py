@@ -24,6 +24,14 @@ System benches (this framework beyond the paper):
   tnn_deep_wave_throughput — the 3-layer ``deep_config`` cascade: waves/sec
                           per backend + kernel launches/wave (fused must
                           stay at 1 for any depth, DESIGN.md §11).
+  tnn_serve_throughput  — the continuous-batching serving pipeline
+                          (DESIGN.md §12) under closed-loop load via
+                          ``tools/loadgen.py``: waves/sec, images/sec,
+                          p50/p95 request latency, occupancy; the default
+                          run emits the fused depth-2 headline row, and
+                          ``--serve`` emits the full direct/pallas/fused x
+                          depth {2,3} grid plus lock-step comparisons and
+                          an open-loop Poisson latency probe.
   lm_step_micro         — smoke-config LM train-step wall time (tokens/s).
   roofline_summary      — aggregates experiments/dryrun JSONs.
 
@@ -31,11 +39,13 @@ Flags: ``--smoke`` shrinks every section for CI wall-clock; ``--json PATH``
 writes the structured rows for artifact upload and regression checking
 (``benchmarks/check_regression.py`` compares waves/sec against the
 committed ``benchmarks/baseline.json``); ``--impl`` restricts the TNN
-wave/train benches to one backend (the CI bench job uploads both the
+wave/train/serve benches to one backend (the CI bench job uploads both the
 default all-backend artifact and an ``--impl fused`` one);
 ``--deep-only`` runs the 3-layer cascade bench — the ONLY mode that emits
 the deep rows, so their gate has a single committed baseline (the
-``bench-deep.json`` artifact vs ``benchmarks/baseline-deep.json``).
+``bench-deep.json`` artifact vs ``benchmarks/baseline-deep.json``);
+``--serve`` likewise runs only the serving load-generation grid (the
+``bench-serve.json`` artifact vs ``benchmarks/baseline-serve.json``).
 """
 from __future__ import annotations
 
@@ -331,6 +341,108 @@ def tnn_deep_wave_throughput(smoke: bool = False,
         _emit("tnn_deep3_fused_speedup", 0.0, x=round(ratio, 3))
 
 
+def _loadgen():
+    """Import tools/loadgen.py (a script dir, not a package)."""
+    import sys
+
+    tools = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "..", "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    import loadgen
+    return loadgen
+
+
+def tnn_serve_throughput(smoke: bool = False,
+                         impls: tuple = ("direct", "pallas", "fused"),
+                         depths: tuple = (2, 3),
+                         headline_only: bool = False) -> None:
+    """Serving throughput + latency through the continuous-batching wave
+    pipeline (DESIGN.md §12), driven by ``tools/loadgen.py``.
+
+    Closed-loop (full backlog) per backend and depth: the PIPELINED
+    engine's waves/sec + images/sec + p50/p95 drain latency + occupancy,
+    next to the lock-step reference loop on the same warm engine — the
+    pipelined/lock-step ratio is the double-buffering win in one number.
+    A final open-loop Poisson probe at ~half the measured fused capacity
+    reports request latency with real queueing delay (rate-dependent, so
+    it carries no ``waves_per_s`` and is never regression-gated).
+
+    ``headline_only`` emits just the fused depth-2 ``tnn_serve_throughput``
+    row — the committed ``baseline.json`` serving gate; the full grid is
+    the ``--serve``-mode ``bench-serve.json`` artifact gated against
+    ``baseline-serve.json``.
+    """
+    lg = _loadgen()
+    sites = int(os.environ.get("TNN_SERVE_SITES", "16"))
+    slots = 8
+    n_req = 64 if smoke else 128
+    reps = 5  # best-of, like _timeit: the gated number must be stable
+    if headline_only:
+        # one depth-2 row; fused unless --impl restricted the run
+        impls = impls if len(impls) == 1 else ("fused",)
+        depths = (2,)
+    print(f"\n== TNN serving: continuous-batching wave pipeline "
+          f"({sites} sites, {slots} slots, {n_req} requests closed-loop, "
+          f"best of {reps}, {' vs '.join(impls)}) ==")
+
+    def best_of(eng, imgs, pipelined):
+        best = None
+        for _ in range(reps):
+            st = lg.run_closed_loop(eng, imgs, n_req, pipelined=pipelined)
+            eng.reset()
+            if best is None or st.waves_per_s > best.waves_per_s:
+                best = st
+        return best
+
+    open_probe = None  # (engine, images) for the fused d2 open-loop probe
+    for depth in depths:
+        for impl in impls:
+            eng = lg.build_engine(sites=sites, slots=slots, impl=impl,
+                                  depth=depth)
+            imgs = lg.test_images(sites, n_req)
+            lg.run_closed_loop(eng, imgs, slots)  # warm the jitted paths
+            eng.reset()
+            lock = best_of(eng, imgs, pipelined=False)
+            pipe = best_of(eng, imgs, pipelined=True)
+            name = ("tnn_serve_throughput" if headline_only
+                    else f"tnn_serve_{impl}_d{depth}")
+            print(f"{impl:9s} d{depth}: pipelined {pipe.waves_per_s:8.2f} "
+                  f"waves/s ({pipe.images_per_s:9.1f} images/s)  "
+                  f"p50 {pipe.p50_ms:6.1f} ms  p95 {pipe.p95_ms:6.1f} ms  "
+                  f"occ {pipe.occupancy:.0%}  "
+                  f"[lock-step {lock.waves_per_s:8.2f} waves/s]")
+            _emit(name, 1e6 * pipe.wall_s / max(pipe.waves, 1),
+                  waves_per_s=round(pipe.waves_per_s, 3),
+                  images_per_s=round(pipe.images_per_s, 1),
+                  p50_ms=round(pipe.p50_ms, 3), p95_ms=round(pipe.p95_ms, 3),
+                  occupancy=round(pipe.occupancy, 4))
+            if not headline_only:
+                _emit(f"tnn_serve_lockstep_{impl}_d{depth}",
+                      1e6 * lock.wall_s / max(lock.waves, 1),
+                      waves_per_s=round(lock.waves_per_s, 3),
+                      images_per_s=round(lock.images_per_s, 1))
+                _emit(f"tnn_serve_pipeline_speedup_{impl}_d{depth}", 0.0,
+                      x=round(pipe.waves_per_s
+                              / max(lock.waves_per_s, 1e-9), 3))
+                if impl == "fused" and depth == 2:
+                    open_probe = (eng, imgs, pipe.images_per_s)
+    if open_probe is not None:
+        eng, imgs, capacity = open_probe
+        rate = max(0.5 * capacity, 20.0)
+        duration = 1.0 if smoke else 2.0
+        arrivals = lg.poisson_arrivals(rate, duration, seed=0)
+        st = lg.run_open_loop(eng, imgs, arrivals)
+        print(f"open-loop fused d2 @ {rate:.0f} req/s x {duration:.1f}s "
+              f"({len(arrivals)} arrivals): p50 {st.p50_ms:.1f} ms  "
+              f"p95 {st.p95_ms:.1f} ms  occ {st.occupancy:.0%}")
+        _emit("tnn_serve_open_fused_d2", 0.0,
+              served=st.requests, rate_hz=round(rate, 1),
+              p50_ms=round(st.p50_ms, 3), p95_ms=round(st.p95_ms, 3),
+              occupancy=round(st.occupancy, 4))
+        eng.reset()
+
+
 def lm_step_micro(smoke: bool = False) -> None:
     import jax
     from repro.configs import smoke_config
@@ -394,17 +506,26 @@ def main() -> None:
                     help="run only the 3-layer cascade bench (the CI "
                          "bench-deep.json artifact, gated against "
                          "benchmarks/baseline-deep.json)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run only the serving load-generation grid "
+                         "(DESIGN.md §12; the CI bench-serve.json "
+                         "artifact, gated against "
+                         "benchmarks/baseline-serve.json)")
     args = ap.parse_args()
     impls = (("direct", "pallas", "fused") if args.impl == "all"
              else (args.impl,))
 
     t0 = time.time()
-    # The 3-layer cascade rows live ONLY in the --deep-only artifact so the
-    # deep3 waves/sec gate has exactly one committed baseline
-    # (baseline-deep.json) — double-gating the same row from bench.json too
-    # would let the two baselines drift apart.
+    # The 3-layer cascade rows live ONLY in the --deep-only artifact (and
+    # the full serving grid ONLY in --serve) so each waves/sec gate has
+    # exactly one committed baseline — double-gating the same row from
+    # bench.json too would let the baselines drift apart. The default run
+    # still emits the single fused depth-2 `tnn_serve_throughput` headline
+    # row, which is the serving gate that rides in baseline.json.
     if args.deep_only:
         tnn_deep_wave_throughput(smoke=args.smoke, impls=impls)
+    elif args.serve:
+        tnn_serve_throughput(smoke=args.smoke, impls=impls, depths=(2, 3))
     else:
         table1_columns()
         table2_prototype()
@@ -412,6 +533,8 @@ def main() -> None:
         column_throughput(smoke=args.smoke)
         tnn_wave_throughput(smoke=args.smoke, impls=impls)
         tnn_train_throughput(smoke=args.smoke, impls=impls)
+        tnn_serve_throughput(smoke=args.smoke, impls=impls,
+                             headline_only=True)
         lm_step_micro(smoke=args.smoke)
         roofline_summary()
     print("\nname,us_per_call,derived")

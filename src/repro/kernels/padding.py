@@ -119,6 +119,23 @@ class PadPlan:
         return u
 
 
+def pad_batch_rows(x: jax.Array, rows: int, T: int) -> jax.Array:
+    """Pad the leading (batch) axis of encoded spike times up to ``rows``
+    with the no-op encoding ``T`` ("never spikes").
+
+    The shared ragged-tail helper for every fixed-shape wave batch outside
+    the kernels themselves: serving (``TNNEngine`` staging partial waves and
+    ``fit`` chunks, DESIGN.md §12) and evaluation
+    (``TNNTrainer._forward_all``) pad through this ONE function, so a
+    padded row is bit-inert on every backend — an all-``T`` volley starts
+    no ramps, crosses no threshold, and exits the cascade still all ``T``.
+    """
+    k = x.shape[0]
+    if k > rows:
+        raise ValueError(f"batch of {k} rows exceeds padded extent {rows}")
+    return _pad_axis(x, 0, rows - k, T)
+
+
 # ---------------------------------------------------------------------------
 # Network-level plan for the fused wave executor (DESIGN.md §10, §11)
 # ---------------------------------------------------------------------------

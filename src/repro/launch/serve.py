@@ -6,7 +6,10 @@ LM serving (the slot-based continuous-batching engine):
         --requests 6 --slots 2
 
 TNN-as-a-service (the paper's prototype classified over the fused Pallas
-path, batch axis data-parallel over the mesh):
+path, batch axis data-parallel over the mesh, served through the
+continuous-batching wave pipeline of DESIGN.md §12 — ``--lockstep`` falls
+back to the blocking reference loop; both print the ``ServeStats`` latency
+record):
 
     PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
         --requests 32 --slots 8 --sites 64 --impl pallas
@@ -53,6 +56,23 @@ def serve_lm(args: argparse.Namespace) -> None:
           f"in {time.time()-t0:.2f}s")
 
 
+def resolve_slots(requested: int, ndata: int) -> int:
+    """Fit the requested slot count to the mesh's data axis by rounding UP
+    to the next multiple — never down. (The pre-fix behaviour rounded down,
+    silently SHRINKING requested serving capacity: ``--slots 7`` on a
+    4-device data axis served 4 slots.) Impossible values error instead of
+    being rewritten."""
+    if ndata < 1:
+        raise ValueError(f"mesh data axis size must be >= 1, got {ndata}")
+    if requested < 1:
+        raise ValueError(f"--slots must be >= 1, got {requested}")
+    resolved = (requested + ndata - 1) // ndata * ndata
+    if resolved != requested:
+        print(f"[serve] --slots {requested} is not a multiple of the data "
+              f"axis size {ndata}; rounding UP to {resolved} slots")
+    return resolved
+
+
 def serve_tnn(args: argparse.Namespace) -> None:
     from repro.configs.tnn_mnist import crop_field, launcher_network_config
     from repro.core import init_network, network_train_wave, encode_images
@@ -61,9 +81,7 @@ def serve_tnn(args: argparse.Namespace) -> None:
     import jax.numpy as jnp
 
     mesh = make_host_mesh()
-    n_slots = args.slots
-    if n_slots % mesh.shape.get("data", 1):
-        n_slots = mesh.shape["data"] * max(n_slots // mesh.shape["data"], 1)
+    n_slots = resolve_slots(args.slots, int(mesh.shape.get("data", 1)))
     cfg = launcher_network_config(args.sites, depth=args.depth,
                                   impl=args.impl)
     print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
@@ -93,14 +111,17 @@ def serve_tnn(args: argparse.Namespace) -> None:
 
     test_imgs, test_labs = digits(args.requests, seed=2)
     test_imgs = crop_field(test_imgs, args.sites)
-    t0 = time.time()
     for uid in range(args.requests):
         eng.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
-    done = eng.run_until_done()
-    dt = time.time() - t0
+    done = eng.run_until_done(pipelined=not args.lockstep)
+    st = eng.stats()
     acc = float(np.mean([done[u].result == test_labs[u] for u in done]))
-    print(f"served {len(done)} images in {eng.waves_served} waves / {dt:.2f}s "
-          f"({1e3 * dt / max(len(done), 1):.1f} ms/image), accuracy {acc:.1%}")
+    mode = "lock-step" if args.lockstep else "pipelined"
+    print(f"served {len(done)} images in {st.waves} waves / {st.wall_s:.2f}s "
+          f"({mode}), accuracy {acc:.1%}")
+    print(f"[serve-stats] {st.waves_per_s:.1f} waves/s  "
+          f"{st.images_per_s:.1f} images/s  p50 {st.p50_ms:.1f} ms  "
+          f"p95 {st.p95_ms:.1f} ms  occupancy {st.occupancy:.0%}")
 
 
 def main() -> None:
@@ -122,6 +143,10 @@ def main() -> None:
                     help="execution backend; 'fused' = one Pallas launch "
                          "per gamma wave (DESIGN.md §10)")
     ap.add_argument("--train-waves", type=int, default=4)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="serve with the blocking one-wave-at-a-time loop "
+                         "instead of the continuous-batching pipeline "
+                         "(the DESIGN.md §12 reference mode)")
     ap.add_argument("--from-ckpt", default=None, metavar="DIR",
                     help="warm-start from a TNN training checkpoint "
                          "(weights + vote table; DESIGN.md §9)")

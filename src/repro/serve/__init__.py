@@ -1,5 +1,11 @@
 # Serving engines: the slot-based LM Engine (continuous-batching-lite) and
-# the TNNEngine that serves the paper's prototype over the fused Pallas path.
-from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+# the TNNEngine continuous-batching wave pipeline that serves the paper's
+# prototype over the fused Pallas path (DESIGN.md §12).
+from repro.serve.tnn_engine import (
+    ClassifyRequest,
+    ServeStats,
+    ServeTimeout,
+    TNNEngine,
+)
 
-__all__ = ["ClassifyRequest", "TNNEngine"]
+__all__ = ["ClassifyRequest", "ServeStats", "ServeTimeout", "TNNEngine"]

@@ -1,19 +1,40 @@
-"""TNN-as-a-service: slot-batched image classification over the fused path.
+"""TNN-as-a-service: continuous-batching wave pipeline over the fused path.
 
 The LM :class:`repro.serve.engine.Engine` amortizes jit cost by giving every
 request a *slot* in one fixed-shape batched decode step. Classification with
 the TNN prototype is one gamma wave per image, so the same trick collapses
-to its simplest form: ``n_slots`` fixed batch rows, one jitted
-encode→forward→classify call per tick regardless of how many requests are
-queued, idle rows carried as zero images whose outputs are ignored.
+to its simplest form: ``n_slots`` fixed batch rows, one jitted forward per
+wave regardless of how many requests are queued, idle rows carried as no-op
+spike encodings whose outputs are ignored.
+
+Serving is a **continuous-batching pipeline** (DESIGN.md §12), not a
+lock-step loop:
+
+* **Admission queue.** ``submit`` timestamps each request on enqueue and
+  appends it to a FIFO; every wave admits up to ``n_slots`` requests.
+  Partial batches are padded with the shared no-op encoding
+  (:func:`repro.kernels.padding.pad_batch_rows` — spike time ``T``), and a
+  tick with an EMPTY queue skips the launch entirely: idle slots never burn
+  a wave.
+* **Double buffering.** ``poll`` stages and dispatches wave *i+1* (host-side
+  image staging + jitted encode + forward + classify, all async under JAX
+  dispatch) BEFORE blocking on wave *i*'s classify readout — the only
+  ``block_until_ready`` point is the ``np.asarray`` on the (b,) predicted
+  class ids, so host staging overlaps device compute.
+* **Latency accounting.** Every request carries enqueue/serve timestamps;
+  :meth:`TNNEngine.stats` aggregates them into a :class:`ServeStats` record
+  (p50/p95 request latency, waves/sec, images/sec, slot occupancy) — the
+  figure of merit ``benchmarks/run.py --serve`` regression-gates.
 
 The forward runs through the network's configured backend — ``"pallas"`` by
-default, i.e. the fused kernels of :mod:`repro.kernels` — and the batch
-(slot) axis is data-parallel ``shard_map``-sharded over the mesh's "data"
-axis via :mod:`repro.sharding`, so the identical engine serves from one CPU
-device (smoke tests, ``interpret=True``) or a production TPU mesh
-(``launch/serve.py --arch tnn-mnist``). Params and the vote table are
-replicated; only images/results travel on the batch axis.
+default; ``"fused"`` classifies each wave in ONE megakernel launch — and
+the batch (slot) axis is data-parallel ``shard_map``-sharded over the
+mesh's "data" axis via :mod:`repro.sharding`, so the identical engine
+serves from one CPU device (smoke tests, ``interpret=True``) or a
+production TPU mesh (``launch/serve.py --arch tnn-mnist``). Params and the
+vote table are replicated; only spikes/results travel on the batch axis.
+Encoding is per-image elementwise, so staging it host-side before the
+sharded forward is bit-identical to encoding inside the shard.
 
 The readout is the paper's unsupervised labelling: :meth:`TNNEngine.fit`
 runs one labelled pass to build the per-site vote table (DESIGN.md §1), and
@@ -24,8 +45,10 @@ warm-starts weights AND vote table from a TNN training checkpoint
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +63,7 @@ from repro.core.network import (
     network_forward,
     with_impl,
 )
+from repro.kernels.padding import pad_batch_rows
 from repro.sharding import shard_map
 
 
@@ -48,10 +72,50 @@ class ClassifyRequest:
     uid: int
     image: np.ndarray  # (H, W) float intensities in [0, 1]
     result: Optional[int] = None  # class id, filled when served
+    t_enqueue: Optional[float] = None  # perf_counter at submit()
+    t_done: Optional[float] = None  # perf_counter when the wave retired
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Enqueue-to-serve latency — queueing + staging + wave compute."""
+        if self.t_enqueue is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_enqueue
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Aggregate serving record (DESIGN.md §12). ``wall_s`` spans first
+    dispatch to last retire; occupancy is served rows over offered slot
+    rows (``waves * n_slots``) — 1.0 means every wave ran full."""
+
+    requests: int
+    waves: int
+    wall_s: float
+    waves_per_s: float
+    images_per_s: float
+    p50_ms: float
+    p95_ms: float
+    occupancy: float
+
+
+class ServeTimeout(RuntimeError):
+    """``run_until_done`` hit ``max_ticks`` with requests still queued.
+
+    Carries the served/unserved split so callers can account for every
+    request instead of discovering a silently partial ``done`` dict."""
+
+    def __init__(self, served: int, unserved: int, max_ticks: int):
+        self.served = served
+        self.unserved = unserved
+        self.max_ticks = max_ticks
+        super().__init__(
+            f"run_until_done hit max_ticks={max_ticks} with {unserved} "
+            f"request(s) still queued ({served} served)")
 
 
 class TNNEngine:
-    """Fixed-slot batched classification engine for the TNN prototype.
+    """Continuous-batching classification engine for the TNN prototype.
 
     Args:
         cfg: network config; its backend is overridden by ``impl``.
@@ -87,14 +151,25 @@ class TNNEngine:
         self.n_slots = n_slots
         self.mesh = mesh
         self.vote_table: Optional[jax.Array] = None
-        self.queue: List[ClassifyRequest] = []
+        self.T = cfg.layers[-1].column.wave.T
+        self.queue: Deque[ClassifyRequest] = collections.deque()
         self.done: Dict[int, ClassifyRequest] = {}
         self.waves_served = 0
+        # one wave at most rides in flight: (admitted requests, async preds)
+        self._inflight: Optional[
+            Tuple[List[ClassifyRequest], jax.Array]] = None
+        self._lat_ms: List[float] = []
+        self._slots_filled = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
 
-        T = cfg.layers[-1].column.wave.T
+        # Staging half: the jitted encoder runs on the ragged admitted
+        # batch (at most n_slots distinct shapes ever compile) so partial
+        # waves pad ENCODED spikes with the shared no-op value T instead of
+        # inventing a second image-level padding convention.
+        self._encode = jax.jit(lambda imgs: encode_images(imgs, self.cfg))
 
-        def fwd(ps, imgs):  # (b, H, W) -> (b, S, q) last-layer spike times
-            x = encode_images(imgs, self.cfg)
+        def fwd(ps, x):  # (b, S, p) spikes -> (b, S, q) last-layer times
             return network_forward(x, ps, self.cfg)[-1]
 
         if mesh is None:
@@ -106,7 +181,7 @@ class TNNEngine:
                 out_specs=P("data"),
             ))
         self._classify = jax.jit(
-            lambda z, vt: classify(z, vt, T, soft=True))
+            lambda z, vt: classify(z, vt, self.T, soft=True))
 
     @classmethod
     def from_checkpoint(
@@ -143,10 +218,9 @@ class TNNEngine:
         """Build the vote-table readout from one labelled pass (the paper's
         neuron-labelling phase; weights are NOT updated — learning stays in
         the training drivers)."""
-        T = self.cfg.layers[-1].column.wave.T
         z = self._forward_batched(jnp.asarray(images, jnp.float32))
         self.vote_table = build_vote_table(
-            z, jnp.asarray(labels), self.cfg.n_classes, T)
+            z, jnp.asarray(labels), self.cfg.n_classes, self.T)
 
     def _forward_batched(self, imgs: jax.Array) -> jax.Array:
         """Run any number of images through the fixed-slot forward."""
@@ -155,41 +229,150 @@ class TNNEngine:
         for off in range(0, n, self.n_slots):
             chunk = imgs[off:off + self.n_slots]
             k = chunk.shape[0]
-            if k < self.n_slots:
-                chunk = jnp.pad(chunk, ((0, self.n_slots - k), (0, 0), (0, 0)))
-            outs.append(self._forward(self.params, chunk)[:k])
+            x = pad_batch_rows(self._encode(chunk), self.n_slots, self.T)
+            outs.append(self._forward(self.params, x)[:k])
         return jnp.concatenate(outs, axis=0)
 
     # -- request loop ------------------------------------------------------
 
     def submit(self, req: ClassifyRequest) -> None:
+        req.t_enqueue = time.perf_counter()
         self.queue.append(req)
 
-    def step(self) -> int:
-        """One engine tick: admit up to ``n_slots`` queued requests, run ONE
-        jitted gamma wave for the whole slot batch, complete the admitted
-        requests. Returns how many requests were served this tick."""
+    @property
+    def pending(self) -> int:
+        """Requests not yet retired: queued + riding the in-flight wave."""
+        inflight = len(self._inflight[0]) if self._inflight else 0
+        return len(self.queue) + inflight
+
+    def _require_vote(self) -> None:
         if self.vote_table is None:
-            raise RuntimeError("call fit(images, labels) before serving")
-        if not self.queue:
-            return 0
-        admitted = self.queue[:self.n_slots]
-        self.queue = self.queue[self.n_slots:]
-        h, w_ = self.cfg.image_hw
-        batch = np.zeros((self.n_slots, h, w_), np.float32)
-        for slot, req in enumerate(admitted):
-            batch[slot] = np.asarray(req.image, np.float32)
-        z = self._forward(self.params, jnp.asarray(batch))
-        preds = np.asarray(self._classify(z, self.vote_table))
+            raise RuntimeError("call fit(images, labels) or warm-start with "
+                               "from_checkpoint before serving")
+
+    def _admit(self) -> List[ClassifyRequest]:
+        admitted: List[ClassifyRequest] = []
+        while self.queue and len(admitted) < self.n_slots:
+            admitted.append(self.queue.popleft())
+        return admitted
+
+    def _dispatch(self, admitted: List[ClassifyRequest]) -> jax.Array:
+        """Stage one wave and launch it asynchronously: host-side image
+        stacking, jitted encode, no-op padding to the fixed slot shape,
+        forward, classify. Returns the (still in-flight) predictions —
+        nothing here blocks on device results."""
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
+        imgs = jnp.asarray(np.stack(
+            [np.asarray(r.image, np.float32) for r in admitted]))
+        x = pad_batch_rows(self._encode(imgs), self.n_slots, self.T)
+        z = self._forward(self.params, x)
+        return self._classify(z, self.vote_table)
+
+    def _retire(self, admitted: List[ClassifyRequest],
+                preds_dev: jax.Array) -> None:
+        """Block on the wave's classify readout (the pipeline's ONLY sync
+        point) and complete its requests with serve timestamps."""
+        preds = np.asarray(preds_dev)
+        now = time.perf_counter()
         for slot, req in enumerate(admitted):
             req.result = int(preds[slot])
+            req.t_done = now
             self.done[req.uid] = req
+            self._lat_ms.append(
+                1e3 * (now - req.t_enqueue) if req.t_enqueue else 0.0)
         self.waves_served += 1
+        self._slots_filled += len(admitted)
+        self._t_last = now
+
+    def _drain_inflight(self) -> int:
+        if self._inflight is None:
+            return 0
+        admitted, preds = self._inflight
+        self._inflight = None
+        self._retire(admitted, preds)
         return len(admitted)
 
-    def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, ClassifyRequest]:
+    def step(self) -> int:
+        """One LOCK-STEP tick: admit up to ``n_slots`` queued requests, run
+        ONE jitted gamma wave for the whole slot batch, block, complete the
+        admitted requests. Returns how many requests were served. The
+        pipelined path (:meth:`poll`) is the production loop; this is the
+        reference the parity tests compare it against."""
+        self._require_vote()
+        if not self.queue:
+            return 0
+        admitted = self._admit()
+        self._retire(admitted, self._dispatch(admitted))
+        return len(admitted)
+
+    def poll(self) -> int:
+        """One PIPELINED tick: stage + dispatch the next wave (skipped
+        entirely when the queue is empty), THEN block on the previously
+        in-flight wave's readout — so wave *i+1*'s host staging and device
+        queueing overlap wave *i*'s compute. Returns requests retired this
+        tick."""
+        self._require_vote()
+        nxt = None
+        if self.queue:
+            admitted = self._admit()
+            nxt = (admitted, self._dispatch(admitted))
+        served = self._drain_inflight()
+        self._inflight = nxt
+        return served
+
+    def run_until_done(self, max_ticks: int = 10_000, *,
+                       pipelined: bool = True) -> Dict[int, ClassifyRequest]:
+        """Serve until the queue drains. ``pipelined=False`` runs the
+        lock-step reference loop. Hitting ``max_ticks`` with requests still
+        queued raises :class:`ServeTimeout` (after retiring any in-flight
+        wave, whose compute is already paid) instead of silently returning
+        a partial ``done`` dict; the served/unserved split counts THIS
+        call only, so a long-lived engine's earlier batches never inflate
+        it."""
         ticks = 0
-        while self.queue and ticks < max_ticks:
-            self.step()
+        served = 0
+        while self.queue or self._inflight is not None:
+            if ticks >= max_ticks:
+                served += self._drain_inflight()
+                if self.queue:
+                    raise ServeTimeout(served=served,
+                                       unserved=len(self.queue),
+                                       max_ticks=max_ticks)
+                break
+            served += self.poll() if pipelined else self.step()
             ticks += 1
         return self.done
+
+    # -- latency accounting ------------------------------------------------
+
+    def stats(self) -> ServeStats:
+        """Aggregate the serve record so far (DESIGN.md §12)."""
+        served = len(self._lat_ms)
+        wall = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        lat = np.asarray(self._lat_ms, np.float64)
+        return ServeStats(
+            requests=served,
+            waves=self.waves_served,
+            wall_s=wall,
+            waves_per_s=self.waves_served / wall if wall > 0 else 0.0,
+            images_per_s=served / wall if wall > 0 else 0.0,
+            p50_ms=float(np.percentile(lat, 50)) if served else 0.0,
+            p95_ms=float(np.percentile(lat, 95)) if served else 0.0,
+            occupancy=(self._slots_filled
+                       / (self.waves_served * self.n_slots))
+            if self.waves_served else 0.0,
+        )
+
+    def reset(self) -> None:
+        """Forget served requests and latency samples between load runs —
+        params, vote table and compiled functions stay warm."""
+        self._drain_inflight()
+        self.queue.clear()
+        self.done = {}
+        self.waves_served = 0
+        self._lat_ms = []
+        self._slots_filled = 0
+        self._t_first = self._t_last = None

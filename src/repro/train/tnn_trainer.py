@@ -58,6 +58,7 @@ from repro.core.network import (
     params_from_tree,
 )
 from repro.data.mnist_like import digits
+from repro.kernels.padding import pad_batch_rows
 
 
 @dataclasses.dataclass
@@ -153,6 +154,30 @@ class TNNTrainer:
         self._metrics_f = (open(tcfg.metrics_path, "a")
                            if tcfg.metrics_path else None)
 
+    # -- metrics-handle lifecycle -----------------------------------------
+
+    def close(self) -> None:
+        """Flush and close the metrics JSONL handle. Idempotent — ``run``
+        calls it from a ``finally`` (so a mid-training exception can't leak
+        the handle or drop buffered records), and ``__exit__``/``__del__``
+        are the safety nets for trainers that never reach ``run``."""
+        f, self._metrics_f = self._metrics_f, None
+        if f is not None:
+            f.close()
+
+    def __enter__(self) -> "TNNTrainer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass  # interpreter teardown: never raise from a finalizer
+
     # -- checkpointing -----------------------------------------------------
 
     @property
@@ -188,14 +213,14 @@ class TNNTrainer:
 
     def _forward_all(self, params, x: np.ndarray) -> jax.Array:
         bs = self.tcfg.wave_batch
+        T = self.cfg.layers[0].column.wave.T
         outs = []
         for off in range(0, x.shape[0], bs):
             chunk = x[off:off + bs]
             k = chunk.shape[0]
-            if k < bs:
-                chunk = np.pad(chunk, ((0, bs - k), (0, 0), (0, 0)),
-                               constant_values=self.cfg.layers[0].column.wave.T)
-            outs.append(self._forward(params, jnp.asarray(chunk))[:k])
+            # ragged tail -> the SAME no-op padding serving uses
+            chunk = pad_batch_rows(jnp.asarray(chunk), bs, T)
+            outs.append(self._forward(params, chunk)[:k])
         return jnp.concatenate(outs, axis=0)
 
     def evaluate(self) -> float:
@@ -226,6 +251,14 @@ class TNNTrainer:
                            for k, v in rec.items()))
 
     def run(self) -> Dict[str, Any]:
+        # the finally runs on mid-training exceptions too: no leaked handle,
+        # no dropped buffered JSONL records
+        try:
+            return self._run()
+        finally:
+            self.close()
+
+    def _run(self) -> Dict[str, Any]:
         resumed = self.maybe_resume()
         if resumed:
             print(f"[tnn-trainer] resumed at wave {self.wave} "
@@ -266,8 +299,6 @@ class TNNTrainer:
         if did_final_eval or self.ckpt.latest_step() != self.wave:
             self.checkpoint(block=True)
             self.ckpt.wait()
-        if self._metrics_f:
-            self._metrics_f.close()
         med = float(np.median(self.wave_times)) if self.wave_times else 0.0
         return {
             "final_wave": self.wave,

@@ -1,0 +1,305 @@
+"""Continuous-batching TNN serving (DESIGN.md §12): pipelined-vs-lock-step
+per-uid parity (depth 2 and 3, fused and per-layer, warm-started and
+meshed), the shared no-op padding helper, latency accounting, slot
+resolution, timeout semantics, and the loadgen harness."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tnn_mnist import crop_field, launcher_network_config
+from repro.core import encode_images, init_network, network_forward
+from repro.data.mnist_like import digits
+from repro.kernels.padding import pad_batch_rows
+from repro.launch.serve import resolve_slots
+from repro.serve.tnn_engine import (
+    ClassifyRequest,
+    ServeTimeout,
+    TNNEngine,
+)
+
+SITES = 4  # tiny perfect-square geometry: 7x7 field
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _loadgen():
+    tools = os.path.join(ROOT, "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    import loadgen
+    return loadgen
+
+
+def _fit_engine(impl="direct", depth=2, n_slots=4, mesh=None):
+    cfg = launcher_network_config(SITES, depth=depth, impl=impl)
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    imgs, labs = digits(16, seed=1)
+    eng = TNNEngine(cfg, params, n_slots=n_slots, impl=impl, mesh=mesh)
+    eng.fit(crop_field(imgs, SITES), labs)
+    return eng
+
+
+def _submit_all(eng, images, n):
+    for uid in range(n):
+        eng.submit(ClassifyRequest(uid=uid, image=images[uid]))
+
+
+# -- satellite: --slots resolution (round UP, log, error) -------------------
+
+
+def test_resolve_slots_rounds_up_never_down(capsys):
+    assert resolve_slots(8, 4) == 8
+    assert resolve_slots(9, 1) == 9
+    # the pre-fix behaviour shrank 5 -> 4 on a 4-device data axis
+    assert resolve_slots(5, 4) == 8
+    assert resolve_slots(1, 4) == 4
+    assert "rounding UP to 8" in capsys.readouterr().out
+    with pytest.raises(ValueError):
+        resolve_slots(0, 4)
+    with pytest.raises(ValueError):
+        resolve_slots(-3, 2)
+    with pytest.raises(ValueError):
+        resolve_slots(4, 0)
+
+
+# -- tentpole: pipelined == lock-step, per request uid ----------------------
+
+
+@pytest.mark.parametrize("depth,impl", [
+    (2, "direct"), (2, "pallas"), (2, "fused"),
+    (3, "direct"), (3, "fused"),
+])
+def test_pipelined_matches_lockstep(depth, impl):
+    """A fixed request set served by the pipelined loop must produce the
+    identical per-uid results as the lock-step reference path — partial
+    final wave included."""
+    n_req = 11  # not a slot multiple: the last wave is partial
+    test_imgs = crop_field(digits(n_req, seed=2)[0], SITES)
+    results = []
+    for pipelined in (False, True):
+        eng = _fit_engine(impl=impl, depth=depth)
+        _submit_all(eng, test_imgs, n_req)
+        done = eng.run_until_done(pipelined=pipelined)
+        assert sorted(done) == list(range(n_req))
+        assert eng.waves_served == 3  # ceil(11 / 4)
+        results.append([done[u].result for u in range(n_req)])
+    assert results[0] == results[1]
+
+
+def test_pipelined_matches_lockstep_from_checkpoint(tmp_path):
+    """Warm-started engines (weights + vote table from a training
+    checkpoint) serve identically pipelined and lock-step."""
+    from repro.train.tnn_trainer import TNNTrainConfig, TNNTrainer
+
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    TNNTrainer(cfg, TNNTrainConfig(
+        wave_batch=4, train_size=16, eval_size=8,
+        ckpt_dir=str(tmp_path), log_every=1000)).run()
+
+    test_imgs = crop_field(digits(9, seed=5)[0], SITES)
+    results = []
+    for pipelined in (False, True):
+        eng = TNNEngine.from_checkpoint(str(tmp_path), cfg, n_slots=4,
+                                        impl="fused")
+        assert eng.vote_table is not None  # no fit pass needed
+        _submit_all(eng, test_imgs, 9)
+        done = eng.run_until_done(pipelined=pipelined)
+        results.append([done[u].result for u in range(9)])
+    assert results[0] == results[1]
+
+
+# -- satellite: the shared no-op padding is bit-inert -----------------------
+
+
+@pytest.mark.parametrize("impl", ["direct", "matmul", "pallas", "fused"])
+def test_padded_rows_are_bit_inert(impl):
+    """Rows padded with the shared T encoding influence nothing: real rows
+    keep their exact bits, and the pad rows exit the cascade still as the
+    all-T no-op wave — on every backend."""
+    cfg = launcher_network_config(SITES, depth=2, impl=impl)
+    T = cfg.layers[0].column.wave.T
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    imgs = crop_field(digits(5, seed=3)[0], SITES)
+    x = encode_images(jnp.asarray(imgs, jnp.float32), cfg)
+    z_full = np.asarray(network_forward(x, params, cfg)[-1])
+    for k in (1, 3, 5):
+        xp = pad_batch_rows(x[:k], 8, T)
+        assert xp.shape[0] == 8 and xp.dtype == x.dtype
+        zp = np.asarray(network_forward(xp, params, cfg)[-1])
+        np.testing.assert_array_equal(zp[:k], z_full[:k])
+        assert (zp[k:] == T).all()  # the no-op wave never fires
+    with pytest.raises(ValueError):
+        pad_batch_rows(x, 3, T)  # shrinking is not padding
+
+
+# -- satellite: timeout raises and accounts for every request ---------------
+
+
+def test_run_until_done_timeout_raises_and_counts():
+    test_imgs = crop_field(digits(6, seed=2)[0], SITES)
+
+    # pipelined: tick 0 dispatches wave 0 (2 requests); at the tick limit
+    # the in-flight wave is retired (its compute is paid), the rest raise
+    eng = _fit_engine(impl="direct", n_slots=2)
+    _submit_all(eng, test_imgs, 6)
+    with pytest.raises(ServeTimeout) as ei:
+        eng.run_until_done(max_ticks=1)
+    assert ei.value.served == 2 and ei.value.unserved == 4
+    assert len(eng.done) == 2  # in-flight wave retired, not lost
+    assert len(eng.queue) == 4  # still queued, explicitly accounted
+
+    # lock-step: two ticks serve 4 of 6
+    eng = _fit_engine(impl="direct", n_slots=2)
+    _submit_all(eng, test_imgs, 6)
+    with pytest.raises(ServeTimeout) as ei:
+        eng.run_until_done(max_ticks=2, pipelined=False)
+    assert ei.value.served == 4 and ei.value.unserved == 2
+
+    # enough ticks: no timeout, everything served
+    eng = _fit_engine(impl="direct", n_slots=2)
+    _submit_all(eng, test_imgs, 6)
+    assert sorted(eng.run_until_done(max_ticks=10)) == list(range(6))
+
+    # long-lived engine: the split counts THIS call, not earlier batches
+    for uid in range(6, 12):
+        eng.submit(ClassifyRequest(uid=uid, image=test_imgs[uid - 6]))
+    with pytest.raises(ServeTimeout) as ei:
+        eng.run_until_done(max_ticks=1)
+    assert ei.value.served == 2 and ei.value.unserved == 4
+
+
+def test_serving_before_fit_raises_everywhere():
+    cfg = launcher_network_config(SITES, depth=2, impl="direct")
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    eng = TNNEngine(cfg, params, n_slots=2, impl="direct")
+    img = crop_field(digits(1, seed=2)[0], SITES)[0]
+    eng.submit(ClassifyRequest(uid=0, image=img))
+    with pytest.raises(RuntimeError, match="fit"):
+        eng.step()
+    with pytest.raises(RuntimeError, match="fit"):
+        eng.poll()
+    with pytest.raises(RuntimeError, match="fit"):
+        eng.run_until_done()
+
+
+# -- tentpole: latency accounting ------------------------------------------
+
+
+def test_serve_stats_accounting():
+    n_req = 10
+    test_imgs = crop_field(digits(n_req, seed=2)[0], SITES)
+    eng = _fit_engine(impl="direct", n_slots=4)
+    _submit_all(eng, test_imgs, n_req)
+    done = eng.run_until_done()
+    st = eng.stats()
+    assert st.requests == n_req and st.waves == 3
+    assert st.occupancy == pytest.approx(n_req / (3 * 4))
+    assert st.wall_s > 0 and st.waves_per_s > 0 and st.images_per_s > 0
+    assert 0 <= st.p50_ms <= st.p95_ms
+    for u in range(n_req):
+        assert done[u].t_enqueue is not None and done[u].t_done is not None
+        assert done[u].latency_s >= 0
+
+    # an empty queue never burns a launch
+    waves_before = eng.waves_served
+    assert eng.poll() == 0 and eng.step() == 0
+    assert eng.waves_served == waves_before
+
+    # reset clears the record but keeps the readout warm
+    eng.reset()
+    st2 = eng.stats()
+    assert st2.requests == 0 and st2.waves == 0 and st2.wall_s == 0.0
+    assert eng.vote_table is not None
+
+
+# -- loadgen harness --------------------------------------------------------
+
+
+def test_loadgen_poisson_and_modes():
+    lg = _loadgen()
+    a1 = lg.poisson_arrivals(100.0, 0.5, seed=3)
+    a2 = lg.poisson_arrivals(100.0, 0.5, seed=3)
+    np.testing.assert_array_equal(a1, a2)  # deterministic per seed
+    assert (np.diff(a1) >= 0).all()
+    assert (a1 >= 0).all() and (a1 < 0.5).all()
+    assert 10 <= len(a1) <= 150  # E[n] = 50
+    with pytest.raises(ValueError):
+        lg.poisson_arrivals(0.0, 1.0)
+
+    eng = lg.build_engine(sites=SITES, slots=2, impl="direct", depth=2)
+    imgs = lg.test_images(SITES, 5)
+    st = lg.run_closed_loop(eng, imgs, 5)
+    assert st.requests == 5 and st.waves == 3
+    eng.reset()
+    st2 = lg.run_open_loop(eng, imgs, np.asarray([0.0, 0.0, 0.01]))
+    assert st2.requests == 3
+    assert sorted(eng.done) == [0, 1, 2]
+
+
+# -- meshed: pipelined serving on a data-sharded mesh == unmeshed reference -
+
+
+MESHED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
+    from repro.core import encode_images, init_network, network_forward
+    from repro.data.mnist_like import digits
+    from repro.kernels.padding import pad_batch_rows
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+
+    mesh = make_host_mesh()
+    assert mesh.shape["data"] == 4, mesh.shape
+    SITES = 4
+    for impl in ("direct", "fused"):
+        cfg = launcher_network_config(SITES, depth=2, impl=impl)
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        fit_imgs, labs = digits(16, seed=1)
+        fit_imgs = crop_field(fit_imgs, SITES)
+        test_imgs = crop_field(digits(11, seed=2)[0], SITES)
+
+        ref = TNNEngine(cfg, params, n_slots=8, impl=impl)  # unmeshed
+        ref.fit(fit_imgs, labs)
+        sh = TNNEngine(cfg, params, n_slots=8, impl=impl, mesh=mesh)
+        sh.fit(fit_imgs, labs)
+        np.testing.assert_array_equal(np.asarray(ref.vote_table),
+                                      np.asarray(sh.vote_table))
+        for uid in range(11):
+            ref.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
+            sh.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
+        a = ref.run_until_done(pipelined=False)
+        b = sh.run_until_done(pipelined=True)
+        assert ([a[u].result for u in range(11)] ==
+                [b[u].result for u in range(11)]), impl
+
+        # the shared no-op padding stays bit-inert under shard_map
+        T = cfg.layers[0].column.wave.T
+        x = encode_images(jnp.asarray(test_imgs, jnp.float32), cfg)
+        xp = pad_batch_rows(x[:3], 8, T)
+        zs = np.asarray(sh._forward(params, xp))
+        zr = np.asarray(network_forward(x[:3], params, cfg)[-1])
+        np.testing.assert_array_equal(zs[:3], zr)
+        assert (zs[3:] == T).all()
+    print("meshed serving parity OK")
+""")
+
+
+def test_meshed_pipelined_matches_unmeshed_lockstep_subprocess():
+    """4-way data-sharded pipelined serving returns the same per-uid
+    results as the unmeshed lock-step reference, and the no-op padding is
+    bit-inert through the shard_map'd forward (subprocess, like
+    test_tnn_trainer's sharded-step test)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", MESHED_SCRIPT], env=env, cwd=ROOT,
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "meshed serving parity OK" in r.stdout

@@ -255,6 +255,40 @@ def test_final_checkpoint_vote_table_is_fresh(tmp_path):
     assert extra["eval_wave"] == extra["wave"] == 8
 
 
+def test_trainer_metrics_handle_closed_on_exception(tmp_path):
+    """A mid-training exception must not leak the metrics JSONL handle or
+    drop buffered records (run() closes from a finally; the context-manager
+    and explicit close() paths are idempotent)."""
+    import json
+
+    cfg = _cfg()
+    mpath = str(tmp_path / "metrics.jsonl")
+    tr = TNNTrainer(cfg, _tcfg(str(tmp_path / "a"), metrics_path=mpath,
+                               log_every=1))
+    real_step, calls = tr.step_fn, {"n": 0}
+
+    def flaky(state, x):
+        if calls["n"] >= 1:
+            raise RuntimeError("boom")
+        calls["n"] += 1
+        return real_step(state, x)
+
+    tr.step_fn = flaky
+    with pytest.raises(RuntimeError, match="boom"):
+        tr.run()
+    assert tr._metrics_f is None  # closed despite the exception
+    with open(mpath) as f:
+        recs = [json.loads(line) for line in f]
+    assert len(recs) == 1 and recs[0]["wave"] == 1  # nothing dropped
+
+    # context-manager + idempotent close
+    with TNNTrainer(cfg, _tcfg(str(tmp_path / "b"),
+                               metrics_path=str(tmp_path / "m2.jsonl"))) as t2:
+        assert t2._metrics_f is not None
+    assert t2._metrics_f is None
+    t2.close()  # second close is a no-op
+
+
 def test_wave_stream_deterministic_and_wraps():
     cfg = _cfg()
     s1 = WaveStream(cfg, n=10, wave_batch=4, seed=1)

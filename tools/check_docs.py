@@ -22,6 +22,12 @@ Three checks, all run by CI next to the tier-1 pytest run:
    documents must exist in ``configs/tnn_mnist.py`` AND be shown in the
    README (the N-layer quickstart), so neither the section nor the entry
    point can silently drift away from the other.
+5. **§12 anchors + the serving flags.** DESIGN.md §12 (continuous-batching
+   serving) must keep its anchor topics — admission, double buffering,
+   latency accounting — the launcher/benchmark flags it documents
+   (``launch/serve.py --lockstep``, ``benchmarks/run.py --serve``) must
+   exist, ``tools/loadgen.py`` must exist, and the README must show the
+   load-generation quickstart.
 
 Run from the repo root:
 
@@ -147,6 +153,43 @@ def check_section11_and_factory(root: pathlib.Path) -> list:
     return problems
 
 
+# §12 is the continuous-batching serving section; these topics are its
+# contract with serve/tnn_engine.py + tools/loadgen.py and must stay.
+SECTION12_ANCHORS = ("admission", "double buffering", "latency accounting")
+SERVE_FLAGS = (("src/repro/launch/serve.py", "--lockstep"),
+               ("benchmarks/run.py", "--serve"))
+
+
+def check_section12_serving(root: pathlib.Path) -> list:
+    """DESIGN.md §12 must exist with its anchor topics; the serving flags
+    it documents must exist in the launcher/benchmark; the loadgen harness
+    must exist and be shown in README.md."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§12\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append(
+            "DESIGN.md: no §12 section (continuous-batching serving)")
+    else:
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION12_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §12: missing anchor topic {anchor!r}")
+    for rel, flag in SERVE_FLAGS:
+        if f'"{flag}"' not in (root / rel).read_text():
+            problems.append(
+                f"{rel}: missing {flag} flag (DESIGN.md §12 documents it)")
+    if not (root / "tools" / "loadgen.py").exists():
+        problems.append("tools/loadgen.py: missing (DESIGN.md §12 documents "
+                        "the load-generation harness)")
+    if "loadgen" not in (root / "README.md").read_text():
+        problems.append("README.md: never mentions the loadgen harness — "
+                        "the §12 serving quickstart must show it")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -172,8 +215,10 @@ def main() -> int:
     backend_problems = check_readme_backends(root)
     launcher_problems = check_launcher_impls(root)
     s11_problems = check_section11_and_factory(root)
+    s12_problems = check_section12_serving(root)
 
-    if dangling or backend_problems or launcher_problems or s11_problems:
+    if (dangling or backend_problems or launcher_problems or s11_problems
+            or s12_problems):
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -190,11 +235,16 @@ def main() -> int:
             print("check_docs: §11 / deep_config problems:", file=sys.stderr)
             for p in s11_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s12_problems:
+            print("check_docs: §12 / serving problems:", file=sys.stderr)
+            for p in s12_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
           f"names only accepted impls; launcher --impl choices match "
-          f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact")
+          f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact; "
+          f"§12 anchors + serving flags + loadgen intact")
     return 0
 
 

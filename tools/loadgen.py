@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Load generation for the TNN serving pipeline (DESIGN.md §12).
+
+Drives a :class:`repro.serve.tnn_engine.TNNEngine` the way traffic would:
+
+* **closed loop** — the full request set is enqueued up front and the
+  engine drains it; throughput-bound (waves/sec, images/sec under full
+  backlog). This is what ``benchmarks/run.py --serve`` regression-gates.
+* **open loop** — requests arrive on a Poisson clock at a configurable
+  rate for a configurable duration; the engine serves them as they land,
+  so the p50/p95 request latencies include real queueing delay. Arrivals
+  are deterministic per seed (reproducible load shapes).
+
+Both modes return the engine's :class:`repro.serve.tnn_engine.ServeStats`.
+Standalone (the quick capacity probe; needs ``PYTHONPATH=src``):
+
+    PYTHONPATH=src python tools/loadgen.py --mode closed --requests 64 \
+        --impl fused --depth 2 --sites 16 --slots 8
+    PYTHONPATH=src python tools/loadgen.py --mode open --rate 200 \
+        --duration 2.0 --impl fused
+
+``benchmarks/run.py --serve`` imports this module to produce the
+``bench-serve.json`` rows CI gates against ``benchmarks/baseline-serve.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def poisson_arrivals(rate_hz: float, duration_s: float,
+                     seed: int = 0) -> np.ndarray:
+    """Sorted arrival times (seconds) of a Poisson process: exponential
+    inter-arrival gaps at ``rate_hz``, truncated at ``duration_s``.
+    Deterministic per seed."""
+    if rate_hz <= 0 or duration_s <= 0:
+        raise ValueError(f"need rate_hz > 0 and duration_s > 0, got "
+                         f"rate_hz={rate_hz}, duration_s={duration_s}")
+    rng = np.random.default_rng(seed)
+    # draw in chunks until past the horizon; E[n] = rate * duration
+    ts: list = []
+    t = 0.0
+    while t < duration_s:
+        gaps = rng.exponential(1.0 / rate_hz, size=max(int(rate_hz), 16))
+        for g in gaps:
+            t += g
+            if t >= duration_s:
+                break
+            ts.append(t)
+    return np.asarray(ts, np.float64)
+
+
+def build_engine(sites: int = 16, slots: int = 8, impl: str = "fused",
+                 depth: int = 2, mesh=None, seed: int = 0):
+    """A ready-to-serve engine on the launcher convention: network from
+    ``launcher_network_config``, fresh weights, vote table fit on a small
+    labelled set — enough readout for load testing (a real deployment
+    warm-starts ``from_checkpoint`` instead)."""
+    import jax
+
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
+    from repro.core import init_network
+    from repro.data.mnist_like import digits
+    from repro.serve.tnn_engine import TNNEngine
+
+    cfg = launcher_network_config(sites, depth=depth, impl=impl)
+    eng = TNNEngine(cfg, init_network(jax.random.PRNGKey(seed), cfg),
+                    n_slots=slots, impl=impl, mesh=mesh)
+    imgs, labs = digits(max(64, 4 * slots), seed=1)
+    eng.fit(crop_field(imgs, sites), labs)
+    return eng
+
+
+def test_images(sites: int, n: int, seed: int = 2) -> np.ndarray:
+    """``n`` held-out digits cropped to the ``sites`` field."""
+    from repro.configs.tnn_mnist import crop_field
+    from repro.data.mnist_like import digits
+
+    return crop_field(digits(n, seed=seed)[0], sites)
+
+
+def run_closed_loop(eng, images: np.ndarray, n_requests: int,
+                    pipelined: bool = True):
+    """Enqueue ``n_requests`` up front, drain, return the engine stats."""
+    from repro.serve.tnn_engine import ClassifyRequest
+
+    for uid in range(n_requests):
+        eng.submit(ClassifyRequest(uid=uid, image=images[uid % len(images)]))
+    eng.run_until_done(pipelined=pipelined)
+    return eng.stats()
+
+
+def run_open_loop(eng, images: np.ndarray, arrivals: np.ndarray):
+    """Submit on the arrival clock, serve pipelined as requests land.
+
+    With nothing pending the loop sleeps straight through to the next
+    arrival (submit is single-threaded, so nothing can enqueue work
+    mid-gap); with pending work it polls the engine — each poll dispatches
+    at most one wave, so admission keeps interleaving with service and a
+    late burst still batches into full waves."""
+    t0 = time.perf_counter()
+    i, n = 0, len(arrivals)
+    from repro.serve.tnn_engine import ClassifyRequest
+
+    while i < n or eng.pending:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(ClassifyRequest(uid=i, image=images[i % len(images)]))
+            i += 1
+        if eng.pending:
+            eng.poll()
+        elif i < n:
+            time.sleep(max(arrivals[i] - now, 0.0))
+    return eng.stats()
+
+
+def _fmt(st) -> str:
+    return (f"{st.requests} requests / {st.waves} waves in {st.wall_s:.2f}s: "
+            f"{st.waves_per_s:.1f} waves/s, {st.images_per_s:.1f} images/s, "
+            f"p50 {st.p50_ms:.1f} ms, p95 {st.p95_ms:.1f} ms, "
+            f"occupancy {st.occupancy:.0%}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=("closed", "open"), default="closed")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="closed-loop request count")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="open-loop arrival window (s)")
+    ap.add_argument("--sites", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--impl", default="fused",
+                    choices=("direct", "matmul", "pallas", "fused"))
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="closed loop only: use the blocking reference loop")
+    args = ap.parse_args()
+
+    eng = build_engine(sites=args.sites, slots=args.slots, impl=args.impl,
+                       depth=args.depth, seed=args.seed)
+    imgs = test_images(args.sites, max(args.requests, 64))
+    # warm the jitted paths so the measured run isn't a compile benchmark
+    run_closed_loop(eng, imgs, args.slots)
+    eng.reset()
+    if args.mode == "closed":
+        st = run_closed_loop(eng, imgs, args.requests,
+                             pipelined=not args.lockstep)
+        mode = "lock-step" if args.lockstep else "pipelined"
+        print(f"[loadgen closed/{mode}] {_fmt(st)}")
+    else:
+        arrivals = poisson_arrivals(args.rate, args.duration, seed=args.seed)
+        st = run_open_loop(eng, imgs, arrivals)
+        print(f"[loadgen open @ {args.rate:.0f} req/s x {args.duration:.1f}s "
+              f"({len(arrivals)} arrivals)] {_fmt(st)}")
+
+
+if __name__ == "__main__":
+    main()
