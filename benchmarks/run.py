@@ -82,6 +82,20 @@ def _timeit(fn: Callable, n: int = 5) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+def _timeit_min(fn: Callable, n: int = 5) -> float:
+    """Best-of-n wall time (us). The right estimator when the measured
+    effect (dispatch amortization) is smaller than scheduler jitter: the
+    minimum is the run least perturbed by noise, so ratios of minima
+    compare the code paths rather than the machine's mood."""
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
 # Kernel-launch counting lives in repro.utils.tracing.pallas_launch_count —
 # shared with the tests so benchmark and assertion count the same thing.
 # (Imported inside the benches: this module must parse without jax.)
@@ -282,6 +296,74 @@ def tnn_train_throughput(smoke: bool = False,
         _emit(f"tnn_trained_ppa_{lib}", 0.0,
               power_mw=round(ppa.power_mw, 4), time_ns=round(ppa.time_ns, 2),
               area_mm2=round(ppa.area_mm2, 4), edp=round(ppa.edp_nj_ns, 4))
+
+
+def tnn_scan_throughput(smoke: bool = False,
+                        impls: tuple = ("direct", "pallas", "fused"),
+                        ks: tuple = (1, 4, 16)) -> None:
+    """Dispatch-amortization profile of the on-device K-wave scan loop
+    (``core.network.make_superbatch_step``, DESIGN.md §13): waves/sec
+    through ONE jitted dispatch that scans K gamma waves of online STDP,
+    for K in {1, 4, 16}.
+
+    The point of the scan is that Python/jit dispatch cost is paid once per
+    SUPERBATCH instead of once per wave, so waves/sec should rise with K
+    until per-wave compute dominates — the K=16/K=1 ratio is the
+    amortization win in one number, and the fused backend's launch count
+    per dispatch (``pallas_launch_count`` on the superbatch step) is
+    asserted == 1: the whole K-wave loop holds a single ``pallas_call``
+    equation inside the scan body. The fused K=16 row is the
+    ``tnn_scan_throughput`` headline gated against ``baseline.json``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core import init_train_state, make_superbatch_step
+    from repro.utils.tracing import pallas_launch_count
+
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
+    B = 8 if smoke else 16
+    theta1, theta2 = default_thetas(sites)
+    print(f"\n== K-wave scan training throughput ({sites}+{sites} columns, "
+          f"batch {B}, K in {ks}, {' vs '.join(impls)}) ==")
+    wps: Dict[str, Dict[int, float]] = {}
+    for impl in impls:
+        cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                             impl=impl)
+        # donate=False: the timing loop re-feeds the same state buffers.
+        step = make_superbatch_step(cfg, donate=False)
+        T = cfg.layers[0].column.wave.T
+        wps[impl] = {}
+        for K in ks:
+            state = init_train_state(jax.random.PRNGKey(0), cfg)
+            x_k = jax.random.randint(
+                jax.random.PRNGKey(1),
+                (K, B, sites, cfg.layers[0].column.p),
+                0, T + 1, dtype=jnp.int8)
+            launches = pallas_launch_count(step, state, x_k)
+            if impl == "fused":
+                assert launches == 1, (
+                    f"fused K={K} superbatch dispatch traced {launches} "
+                    f"pallas launches, want 1 (scan body holds one)")
+            us = _timeit_min(
+                lambda: jax.block_until_ready(step(state, x_k)[1]),
+                n=5 if smoke else 8)
+            wps[impl][K] = K * 1e6 / us
+            print(f"{impl:9s} K={K:<3d}: {us/1e3:9.1f} ms/dispatch = "
+                  f"{wps[impl][K]:8.2f} waves/s  "
+                  f"[{launches} pallas launch(es)/dispatch]")
+            _emit(f"tnn_scan_k{K}_{impl}", us,
+                  waves_per_s=round(wps[impl][K], 3),
+                  launches=launches)
+        kmax, kmin = max(ks), min(ks)
+        ratio = wps[impl][kmax] / max(wps[impl][kmin], 1e-12)
+        print(f"{impl:9s} K={kmax}/K={kmin} amortization: {ratio:.2f}x")
+        _emit(f"tnn_scan_amortization_{impl}", 0.0, x=round(ratio, 3))
+    if "fused" in wps:
+        kmax = max(ks)
+        us_headline = kmax * 1e6 / wps["fused"][kmax]
+        _emit("tnn_scan_throughput", us_headline,
+              waves_per_s=round(wps["fused"][kmax], 3), k=kmax)
 
 
 def tnn_deep_wave_throughput(smoke: bool = False,
@@ -533,6 +615,7 @@ def main() -> None:
         column_throughput(smoke=args.smoke)
         tnn_wave_throughput(smoke=args.smoke, impls=impls)
         tnn_train_throughput(smoke=args.smoke, impls=impls)
+        tnn_scan_throughput(smoke=args.smoke, impls=impls)
         tnn_serve_throughput(smoke=args.smoke, impls=impls,
                              headline_only=True)
         lm_step_micro(smoke=args.smoke)

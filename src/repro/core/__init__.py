@@ -29,12 +29,16 @@ from repro.core.network import (
     init_train_state,
     encode_images,
     input_wave_spec,
+    make_superbatch_step,
     make_train_step,
     network_forward,
+    network_forward_superbatch,
     network_train_step,
+    network_train_superbatch,
     network_train_wave,
     params_from_tree,
     params_to_tree,
+    superbatch_keys,
     build_vote_table,
     classify,
     build_centroids,
@@ -51,9 +55,10 @@ __all__ = [
     "column_step", "crossing_time", "init_weights", "wta_inhibit",
     "LayerConfig", "init_layer", "layer_forward", "layer_stdp_net", "layer_step",
     "NetworkConfig", "prototype_config", "init_network", "init_train_state",
-    "encode_images", "input_wave_spec", "make_train_step",
-    "network_forward", "network_train_step", "network_train_wave",
-    "params_from_tree", "params_to_tree",
+    "encode_images", "input_wave_spec", "make_superbatch_step",
+    "make_train_step", "network_forward", "network_forward_superbatch",
+    "network_train_step", "network_train_superbatch", "network_train_wave",
+    "params_from_tree", "params_to_tree", "superbatch_keys",
     "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",
     "hwmodel", "macros",
 ]

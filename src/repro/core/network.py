@@ -209,6 +209,133 @@ def network_train_wave(
 
 
 # ---------------------------------------------------------------------------
+# On-device K-wave scan loop: superbatches of gamma waves (§13).
+# ---------------------------------------------------------------------------
+
+
+def network_forward_superbatch(
+    x_k: jax.Array, params: Sequence[jax.Array], cfg: NetworkConfig
+) -> List[jax.Array]:
+    """Run K forward gamma waves in ONE ``lax.scan`` — x_k is (K, B, C, p)
+    encoded spike times, returns per-layer post-WTA spike times stacked on a
+    leading wave axis ((K, B, C, q_i) each). Each wave is exactly
+    :func:`network_forward` of the matching slice, so classify-per-wave over
+    the stacked output matches per-wave classify bit for bit (DESIGN.md
+    §13). Under ``impl="fused"`` the scan body holds ONE ``pallas_call``:
+    the whole superbatch is one launch geometry per dispatch."""
+
+    def body(carry, x):
+        return carry, tuple(network_forward(x, params, cfg))
+
+    _, outs = jax.lax.scan(body, None, x_k)
+    return [z for z in outs]
+
+
+def network_train_superbatch(
+    x_k: jax.Array,
+    params: Sequence[jax.Array],
+    cfg: NetworkConfig,
+    keys_k: jax.Array,
+    *,
+    axis_name: Optional[str] = None,
+    data_shards: int = 1,
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """K consecutive learning gamma waves in ONE ``lax.scan``: the STDP-
+    updated weights stay on device between waves (the scan carry), each wave
+    ``i`` consumes its own pre-split key ``keys_k[i]`` and is bit-exact with
+    one :func:`network_train_wave` / :func:`network_train_step` call on the
+    same ``(x, key)`` — so ``scan(K)`` training equals K sequential wave
+    steps at any depth and on any backend (DESIGN.md §13).
+
+    x_k: (K, B, C, p) spike times; keys_k: (K,) stacked PRNG keys. The
+    counters inside each wave keep the shard-additive ``out="net"`` form and
+    psum over ``axis_name`` exactly like the single-wave step, so the
+    sharded training path is untouched. Returns (per-layer z stacks
+    ((K, B, C, q_i) each), final per-layer weights)."""
+
+    def body(ps, xs):
+        x, key = xs
+        outs, new_ps = network_train_step(
+            x, list(ps), cfg, key,
+            axis_name=axis_name, data_shards=data_shards)
+        return tuple(new_ps), tuple(outs)
+
+    new_params, outs = jax.lax.scan(body, tuple(params), (x_k, keys_k))
+    return [z for z in outs], list(new_params)
+
+
+def superbatch_keys(rng: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Pre-split K per-wave step keys from ONE stream key by the same
+    chained ``jax.random.split`` the sequential trainer performs — wave i's
+    key is ``split(...split(split(rng)[0])[0]...)[1]`` — so a K-wave
+    superbatch consumes exactly the key sequence K single-wave steps would,
+    and the stream key that comes back is the one a sequential run would
+    carry. This is what makes checkpoint resume K-agnostic (DESIGN.md §13).
+    Returns ``(advanced stream key, (K,) stacked per-wave keys)``."""
+
+    def body(key, _):
+        key, sub = jax.random.split(key)
+        return key, sub
+
+    return jax.lax.scan(body, rng, None, length=k)
+
+
+def make_superbatch_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
+    """Build the jitted K-wave production train step:
+    ``(state, x_k) -> (state, z_k)`` — the superbatch form of
+    :func:`make_train_step` (DESIGN.md §13).
+
+    ``x_k`` is (K, B, C, p); K is read from the shape, so one returned
+    callable serves every chunk size (each distinct K compiles once). The
+    state buffers are **donated** — the K STDP weight updates happen in
+    place on device with no host round-trip between waves — the per-wave
+    keys are pre-split from ``state["rng"]`` by :func:`superbatch_keys`
+    (bit-exact with K sequential :func:`make_train_step` calls, so a
+    trainer may checkpoint under one ``superbatch_k`` and resume under
+    another), and the wave counter advances by K. ``z_k`` stacks the last
+    layer's post-WTA spike times per wave ((K, B, C, q)).
+
+    With a ``mesh`` the per-wave batch axis (axis 1) is shard_map-sharded
+    over "data" and the counters psum inside the scan body — same bits as
+    the unsharded superbatch and as K sequential sharded steps.
+    """
+    for l in cfg.layers:
+        if l.column.stdp.batch_reduce != "sum":
+            raise ValueError("make_superbatch_step requires "
+                             "batch_reduce='sum'")
+
+    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+
+    def step(state, x_k):
+        k = x_k.shape[0]
+        params = params_from_tree(state["params"], cfg)
+        key, subs = superbatch_keys(state["rng"], k)
+        outs, new_params = network_train_superbatch(
+            x_k, params, cfg, subs,
+            axis_name=None if mesh is None else "data",
+            data_shards=n_data,
+        )
+        new_state = {
+            "params": params_to_tree(new_params),
+            "rng": key,
+            "wave": state["wave"] + k,
+        }
+        return new_state, outs[-1]
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import shard_map
+
+        step = shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(None, "data")),
+            out_specs=(P(), P(None, "data")),
+        )
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
 # Production training step: counter-form STDP, shardable, donated (§9).
 # ---------------------------------------------------------------------------
 

@@ -90,7 +90,8 @@ def serve_tnn(args: argparse.Namespace) -> None:
         # trained deployment: weights + vote table from the training
         # checkpoint, no warm-up or fit pass (DESIGN.md §9)
         eng = TNNEngine.from_checkpoint(
-            args.from_ckpt, cfg, n_slots=n_slots, impl=args.impl, mesh=mesh)
+            args.from_ckpt, cfg, n_slots=n_slots, impl=args.impl, mesh=mesh,
+            superbatch_k=args.superbatch_k)
         print(f"warm-started from {args.from_ckpt} "
               f"(vote table: {eng.vote_table is not None})")
         if eng.vote_table is None:
@@ -106,7 +107,8 @@ def serve_tnn(args: argparse.Namespace) -> None:
             key, k = jax.random.split(key)
             _, params = network_train_wave(x[:16], params, cfg, k)
 
-        eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl, mesh=mesh)
+        eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl,
+                        mesh=mesh, superbatch_k=args.superbatch_k)
         eng.fit(imgs, labs)
 
     test_imgs, test_labs = digits(args.requests, seed=2)
@@ -143,6 +145,12 @@ def main() -> None:
                     help="execution backend; 'fused' = one Pallas launch "
                          "per gamma wave (DESIGN.md §10)")
     ap.add_argument("--train-waves", type=int, default=4)
+    ap.add_argument("--superbatch-k", type=int, default=1,
+                    help="max gamma waves one poll dispatch may scan on "
+                         "device when the backlog is deeper than --slots: "
+                         "K > 1 drains up to K x slots requests per jitted "
+                         "dispatch, latency stays per-request "
+                         "(DESIGN.md §13)")
     ap.add_argument("--lockstep", action="store_true",
                     help="serve with the blocking one-wave-at-a-time loop "
                          "instead of the continuous-batching pipeline "

@@ -46,7 +46,7 @@ def train_tnn(args: argparse.Namespace) -> None:
     ckpt_dir = args.ckpt_dir or "/tmp/repro_tnn_ckpt"
     tcfg = train_config(
         sites=sites, smoke=args.smoke, epochs=args.epochs,
-        ckpt_dir=ckpt_dir,
+        ckpt_dir=ckpt_dir, superbatch_k=args.superbatch_k,
         eval_every=args.eval_every, ckpt_every=args.ckpt_every,
         metrics_path=ckpt_dir + "/metrics.jsonl")
     ndata = int(mesh.shape.get("data", 1))
@@ -88,6 +88,11 @@ def main() -> None:
                     help="cascade depth: 2 = the paper prototype, other "
                          "depths build the deep_config N-layer cascade "
                          "(DESIGN.md §11; serve with the same --depth)")
+    ap.add_argument("--superbatch-k", type=int, default=1,
+                    help="gamma waves per jitted dispatch: K > 1 scans K "
+                         "waves on device in one launch geometry, clamped "
+                         "at eval/checkpoint boundaries — bit-exact with "
+                         "K=1 for any K (DESIGN.md §13)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="waves between vote-table evals (0 = epoch ends)")
     ap.add_argument("--ckpt-every", type=int, default=0,

@@ -21,6 +21,13 @@ lock-step loop:
   dispatch) BEFORE blocking on wave *i*'s classify readout — the only
   ``block_until_ready`` point is the ``np.asarray`` on the (b,) predicted
   class ids, so host staging overlaps device compute.
+* **K-wave superbatch drain.** With ``superbatch_k > 1`` a tick whose
+  backlog is deeper than one wave admits up to ``K x n_slots`` requests and
+  dispatches them as ONE jitted ``lax.scan`` over K gamma waves
+  (DESIGN.md §13) — the Python dispatch cost is paid once per K waves, but
+  the latency record stays per-REQUEST (each request keeps its own
+  enqueue/serve timestamps), and every wave of the superbatch counts in
+  ``ServeStats.waves`` exactly like a separately dispatched wave.
 * **Latency accounting.** Every request carries enqueue/serve timestamps;
   :meth:`TNNEngine.stats` aggregates them into a :class:`ServeStats` record
   (p50/p95 request latency, waves/sec, images/sec, slot occupancy) — the
@@ -61,6 +68,7 @@ from repro.core.network import (
     classify,
     encode_images,
     network_forward,
+    network_forward_superbatch,
     with_impl,
 )
 from repro.kernels.padding import pad_batch_rows
@@ -129,6 +137,9 @@ class TNNEngine:
             references).
         mesh: optional ``Mesh`` with a "data" axis for data-parallel
             sharding of the slot axis; ``None`` serves unsharded.
+        superbatch_k: max gamma waves one ``poll`` dispatch may scan on
+            device when the admission queue is deeper than ``n_slots``
+            (DESIGN.md §13); 1 = one wave per dispatch (the PR-5 pipeline).
     """
 
     def __init__(
@@ -138,9 +149,12 @@ class TNNEngine:
         n_slots: int = 8,
         impl: str = "pallas",
         mesh: Optional[Mesh] = None,
+        superbatch_k: int = 1,
     ):
         cfg = with_impl(cfg, impl)
         cfg.validate()
+        if superbatch_k < 1:
+            raise ValueError(f"superbatch_k={superbatch_k} must be >= 1")
         if mesh is not None:
             ndata = mesh.shape.get("data", 1)
             if n_slots % max(ndata, 1):
@@ -150,14 +164,16 @@ class TNNEngine:
         self.params = list(params)
         self.n_slots = n_slots
         self.mesh = mesh
+        self.superbatch_k = superbatch_k
         self.vote_table: Optional[jax.Array] = None
         self.T = cfg.layers[-1].column.wave.T
         self.queue: Deque[ClassifyRequest] = collections.deque()
         self.done: Dict[int, ClassifyRequest] = {}
         self.waves_served = 0
-        # one wave at most rides in flight: (admitted requests, async preds)
+        # one dispatch at most rides in flight: (per-wave admitted request
+        # lists, async (k, n_slots) preds) — k == 1 for single-wave ticks
         self._inflight: Optional[
-            Tuple[List[ClassifyRequest], jax.Array]] = None
+            Tuple[List[List[ClassifyRequest]], jax.Array]] = None
         self._lat_ms: List[float] = []
         self._slots_filled = 0
         self._t_first: Optional[float] = None
@@ -172,13 +188,22 @@ class TNNEngine:
         def fwd(ps, x):  # (b, S, p) spikes -> (b, S, q) last-layer times
             return network_forward(x, ps, self.cfg)[-1]
 
+        def fwd_k(ps, x_k):  # (k, slots, S, p) -> (k, slots, S, q)
+            return network_forward_superbatch(x_k, ps, self.cfg)[-1]
+
         if mesh is None:
             self._forward = jax.jit(fwd)
+            self._forward_sb = jax.jit(fwd_k)
         else:
             self._forward = jax.jit(shard_map(
                 fwd, mesh=mesh,
                 in_specs=(P(), P("data")),
                 out_specs=P("data"),
+            ))
+            self._forward_sb = jax.jit(shard_map(
+                fwd_k, mesh=mesh,
+                in_specs=(P(), P(None, "data")),
+                out_specs=P(None, "data"),
             ))
         self._classify = jax.jit(
             lambda z, vt: classify(z, vt, self.T, soft=True))
@@ -193,6 +218,7 @@ class TNNEngine:
         n_slots: int = 8,
         impl: str = "pallas",
         mesh: Optional[Mesh] = None,
+        superbatch_k: int = 1,
     ) -> "TNNEngine":
         """Warm-start serving from a TNN training checkpoint.
 
@@ -207,7 +233,8 @@ class TNNEngine:
 
         state, extra = restore_tnn(Checkpointer(ckpt_dir), cfg, step)
         eng = cls(cfg, params_from_tree(state["params"], cfg),
-                  n_slots=n_slots, impl=impl, mesh=mesh)
+                  n_slots=n_slots, impl=impl, mesh=mesh,
+                  superbatch_k=superbatch_k)
         if extra.get("has_vote"):
             eng.vote_table = state["vote_table"]
         return eng
@@ -241,8 +268,10 @@ class TNNEngine:
 
     @property
     def pending(self) -> int:
-        """Requests not yet retired: queued + riding the in-flight wave."""
-        inflight = len(self._inflight[0]) if self._inflight else 0
+        """Requests not yet retired: queued + riding the in-flight
+        dispatch (all of its waves)."""
+        inflight = (sum(len(w) for w in self._inflight[0])
+                    if self._inflight else 0)
         return len(self.queue) + inflight
 
     def _require_vote(self) -> None:
@@ -256,6 +285,23 @@ class TNNEngine:
             admitted.append(self.queue.popleft())
         return admitted
 
+    def _admit_waves(self, max_waves: int) -> List[List[ClassifyRequest]]:
+        """FIFO-admit up to ``max_waves`` full-or-partial waves of queued
+        requests (only the LAST wave of a dispatch may be partial)."""
+        waves: List[List[ClassifyRequest]] = []
+        while self.queue and len(waves) < max_waves:
+            waves.append(self._admit())
+        return waves
+
+    def _stage_wave(self, admitted: List[ClassifyRequest]) -> jax.Array:
+        """Host-stack + jitted-encode + no-op-pad one wave's images to the
+        fixed (n_slots, S, p) spike shape — the same staging (same encode
+        shapes, same pad convention) whether the wave dispatches alone or
+        inside a superbatch scan."""
+        imgs = jnp.asarray(np.stack(
+            [np.asarray(r.image, np.float32) for r in admitted]))
+        return pad_batch_rows(self._encode(imgs), self.n_slots, self.T)
+
     def _dispatch(self, admitted: List[ClassifyRequest]) -> jax.Array:
         """Stage one wave and launch it asynchronously: host-side image
         stacking, jitted encode, no-op padding to the fixed slot shape,
@@ -263,35 +309,52 @@ class TNNEngine:
         nothing here blocks on device results."""
         if self._t_first is None:
             self._t_first = time.perf_counter()
-        imgs = jnp.asarray(np.stack(
-            [np.asarray(r.image, np.float32) for r in admitted]))
-        x = pad_batch_rows(self._encode(imgs), self.n_slots, self.T)
-        z = self._forward(self.params, x)
+        z = self._forward(self.params, self._stage_wave(admitted))
         return self._classify(z, self.vote_table)
 
-    def _retire(self, admitted: List[ClassifyRequest],
+    def _dispatch_super(self,
+                        waves: List[List[ClassifyRequest]]) -> jax.Array:
+        """Stage K admitted waves and launch them as ONE jitted scan
+        dispatch (DESIGN.md §13): per-wave encode + pad reuse the single-
+        wave staging shapes, the K-wave forward runs on device with the
+        inter-wave loop inside the jit, and the classify readout covers all
+        K x n_slots rows at once (classify is row-independent, so per-uid
+        results are bit-identical to K separate dispatches). Returns the
+        (still in-flight) (k, n_slots) predictions."""
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
+        x_k = jnp.stack([self._stage_wave(w) for w in waves])
+        z_k = self._forward_sb(self.params, x_k)  # (k, slots, S, q)
+        preds = self._classify(
+            z_k.reshape(-1, *z_k.shape[2:]), self.vote_table)
+        return preds.reshape(len(waves), self.n_slots)
+
+    def _retire(self, waves: List[List[ClassifyRequest]],
                 preds_dev: jax.Array) -> None:
-        """Block on the wave's classify readout (the pipeline's ONLY sync
-        point) and complete its requests with serve timestamps."""
+        """Block on the dispatch's classify readout (the pipeline's ONLY
+        sync point) and complete its requests with serve timestamps.
+        ``preds_dev`` is (k, n_slots); every wave of the dispatch counts in
+        the wave totals, and latency stays per-request."""
         preds = np.asarray(preds_dev)
         now = time.perf_counter()
-        for slot, req in enumerate(admitted):
-            req.result = int(preds[slot])
-            req.t_done = now
-            self.done[req.uid] = req
-            self._lat_ms.append(
-                1e3 * (now - req.t_enqueue) if req.t_enqueue else 0.0)
-        self.waves_served += 1
-        self._slots_filled += len(admitted)
+        for w, admitted in enumerate(waves):
+            for slot, req in enumerate(admitted):
+                req.result = int(preds[w, slot])
+                req.t_done = now
+                self.done[req.uid] = req
+                self._lat_ms.append(
+                    1e3 * (now - req.t_enqueue) if req.t_enqueue else 0.0)
+            self._slots_filled += len(admitted)
+        self.waves_served += len(waves)
         self._t_last = now
 
     def _drain_inflight(self) -> int:
         if self._inflight is None:
             return 0
-        admitted, preds = self._inflight
+        waves, preds = self._inflight
         self._inflight = None
-        self._retire(admitted, preds)
-        return len(admitted)
+        self._retire(waves, preds)
+        return sum(len(w) for w in waves)
 
     def step(self) -> int:
         """One LOCK-STEP tick: admit up to ``n_slots`` queued requests, run
@@ -303,20 +366,28 @@ class TNNEngine:
         if not self.queue:
             return 0
         admitted = self._admit()
-        self._retire(admitted, self._dispatch(admitted))
+        self._retire([admitted], self._dispatch(admitted)[None])
         return len(admitted)
 
     def poll(self) -> int:
         """One PIPELINED tick: stage + dispatch the next wave (skipped
         entirely when the queue is empty), THEN block on the previously
-        in-flight wave's readout — so wave *i+1*'s host staging and device
-        queueing overlap wave *i*'s compute. Returns requests retired this
-        tick."""
+        in-flight dispatch's readout — so dispatch *i+1*'s host staging and
+        device queueing overlap dispatch *i*'s compute. When
+        ``superbatch_k > 1`` and the backlog is deeper than one wave, the
+        dispatch drains up to ``K x n_slots`` requests as ONE on-device
+        K-wave scan (DESIGN.md §13). Returns requests retired this tick."""
         self._require_vote()
         nxt = None
         if self.queue:
-            admitted = self._admit()
-            nxt = (admitted, self._dispatch(admitted))
+            if self.superbatch_k > 1 and len(self.queue) > self.n_slots:
+                k = min(self.superbatch_k,
+                        -(-len(self.queue) // self.n_slots))
+                waves = self._admit_waves(k)
+                nxt = (waves, self._dispatch_super(waves))
+            else:
+                admitted = self._admit()
+                nxt = ([admitted], self._dispatch(admitted)[None])
         served = self._drain_inflight()
         self._inflight = nxt
         return served

@@ -15,6 +15,14 @@ silicon applies them — so its trainer drives gamma waves instead:
   backend. The loop is depth-agnostic: the 2-layer prototype and the
   N-layer ``configs.tnn_mnist.deep_config`` cascades train through the
   same step, stream, and checkpoint protocol.
+* **K-wave superbatches** — ``superbatch_k > 1`` slices the wave stream
+  into K-wave chunks and dispatches each chunk as ONE jitted
+  ``core.network.make_superbatch_step`` call: a ``lax.scan`` over K waves
+  with the weights donated and the inter-wave state resident on device, so
+  the host pays one Python dispatch per K waves instead of per wave
+  (DESIGN.md §13). Chunks are clamped at every metrics/eval/checkpoint
+  cadence point (boundary semantics), and the per-wave key pre-split makes
+  the run — and checkpoint resume — bit-exact for ANY ``superbatch_k``.
 * **deterministic stream** — :class:`WaveStream` generates + encodes the
   (reduced) training set once; ``batch_at(wave)`` is a pure function of the
   wave counter, so resume-and-replay is exact (same contract as
@@ -53,6 +61,7 @@ from repro.core.network import (
     classify,
     encode_images,
     init_train_state,
+    make_superbatch_step,
     make_train_step,
     network_forward,
     params_from_tree,
@@ -67,6 +76,7 @@ class TNNTrainConfig:
 
     epochs: int = 1
     wave_batch: int = 16
+    superbatch_k: int = 1          # gamma waves per jitted dispatch (§13)
     train_size: int = 256          # images in the (generated) labelled set
     eval_size: int = 128           # held-out images scored at eval points
     eval_every: int = 0            # waves between evals; 0 = epoch ends only
@@ -114,6 +124,13 @@ class WaveStream:
         idx = (np.arange(self.wave_batch) + wave * self.wave_batch) % self.n
         return self.x[idx]
 
+    def superbatch_at(self, wave: int, k: int) -> np.ndarray:
+        """K consecutive wave batches stacked on a leading wave axis
+        ((k, wave_batch, C, p)): slice ``i`` IS ``batch_at(wave + i)``, so a
+        K-wave superbatch consumes exactly the stream a sequential run
+        would (DESIGN.md §13)."""
+        return np.stack([self.batch_at(wave + i) for i in range(k)])
+
 
 class TNNTrainer:
     """Checkpointed, resumable, wave-batched STDP training loop.
@@ -126,6 +143,8 @@ class TNNTrainer:
 
     def __init__(self, cfg: NetworkConfig, tcfg: TNNTrainConfig, mesh=None):
         cfg.validate()
+        if tcfg.superbatch_k < 1:
+            raise ValueError(f"superbatch_k={tcfg.superbatch_k} must be >= 1")
         if mesh is not None:
             ndata = int(mesh.shape.get("data", 1))
             if tcfg.wave_batch % max(ndata, 1):
@@ -136,6 +155,11 @@ class TNNTrainer:
         self.tcfg = tcfg
         self.mesh = mesh
         self.step_fn = make_train_step(cfg, mesh=mesh)
+        # one callable serves every chunk size K (compiled per distinct K);
+        # built only when superbatching is on, so superbatch_k=1 runs are
+        # byte-for-byte the PR-2 lock-step loop.
+        self.superbatch_fn = (make_superbatch_step(cfg, mesh=mesh)
+                              if tcfg.superbatch_k > 1 else None)
         self.state = init_train_state(jax.random.PRNGKey(tcfg.seed), cfg)
         self.stream = WaveStream(cfg, tcfg.train_size, tcfg.wave_batch,
                                  seed=tcfg.data_seed)
@@ -258,6 +282,23 @@ class TNNTrainer:
         finally:
             self.close()
 
+    def _chunk_k(self, wave: int, total: int) -> int:
+        """Waves the next dispatch may run: up to ``superbatch_k``, clamped
+        so no eval/checkpoint/epoch cadence point (or the end of training)
+        falls MID-superbatch — every cadence action still happens at the
+        exact wave count the lock-step loop would perform it at (the §13
+        boundary semantics)."""
+        tc = self.tcfg
+        nxt = total
+        if tc.eval_every:
+            nxt = min(nxt, (wave // tc.eval_every + 1) * tc.eval_every)
+        if tc.ckpt_every:
+            nxt = min(nxt, (wave // tc.ckpt_every + 1) * tc.ckpt_every)
+        if not tc.eval_every or not tc.ckpt_every:
+            wpe = tc.waves_per_epoch
+            nxt = min(nxt, (wave // wpe + 1) * wpe)
+        return min(tc.superbatch_k, nxt - wave)
+
     def _run(self) -> Dict[str, Any]:
         resumed = self.maybe_resume()
         if resumed:
@@ -267,18 +308,27 @@ class TNNTrainer:
         wpe = self.tcfg.waves_per_epoch
         while self.wave < total:
             wave = self.wave
-            x = jnp.asarray(self.stream.batch_at(wave))
             t0 = time.perf_counter()
-            self.state, z = self.step_fn(self.state, x)
+            if self.superbatch_fn is None:
+                k = 1
+                x = jnp.asarray(self.stream.batch_at(wave))
+                self.state, z = self.step_fn(self.state, x)
+            else:
+                k = self._chunk_k(wave, total)
+                x_k = jnp.asarray(self.stream.superbatch_at(wave, k))
+                self.state, z_k = self.superbatch_fn(self.state, x_k)
+                z = z_k[-1]  # the chunk-end wave's readout, like lock-step
             jax.block_until_ready(z)
             dt = time.perf_counter() - t0
-            self.wave_times.append(dt)
-            wave += 1
+            self.wave_times.append(dt / k)
+            wave += k
             rec = {"wave": wave, "dt_s": round(dt, 4),
-                   "waves_per_s": round(1.0 / max(dt, 1e-9), 3),
+                   "waves_per_s": round(k / max(dt, 1e-9), 3),
                    "fired": round(float((np.asarray(z) <
                                          self.cfg.layers[-1].column.wave.T)
                                         .mean()), 4)}
+            if k > 1:
+                rec["superbatch_k"] = k
             at_epoch_end = wave % wpe == 0
             if (self.tcfg.eval_every and wave % self.tcfg.eval_every == 0) or \
                     (not self.tcfg.eval_every and at_epoch_end):

@@ -209,3 +209,93 @@ def assert_cross_impl_parity(spec, train: bool = True):
             assert pallas_launch_count(
                 lambda xb, kk: network_train_wave(xb, params, fused, kk)[1],
                 x, k) == 1
+
+
+def assert_scan_parity(spec, ks=(1, 2, 5)):
+    """The K-wave scan property (DESIGN.md §13): for one sampled topology,
+    training K gamma waves through the on-device scan loop
+    (``network_train_superbatch`` fed ``superbatch_keys`` pre-split keys)
+    is bit-exact — per-wave per-layer spike times AND final weights — with
+    K sequential single-wave ``network_train_step`` calls on the direct
+    reference, for every backend and every K in ``ks``; the forward-only
+    superbatch's vote-table classification matches per-wave classify
+    per-uid; and a fused-capable cascade's whole K-wave training dispatch
+    traces exactly ONE ``pallas_call`` equation (the scan body holds one
+    megakernel launch, amortized over K waves)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        build_vote_table, classify, init_network, network_forward,
+        network_forward_superbatch, network_train_step,
+        network_train_superbatch, superbatch_keys, with_impl,
+    )
+    from repro.kernels.padding import fused_wave_capable
+    from repro.utils.tracing import pallas_launch_count
+
+    ref = build_network(spec)
+    params0 = init_network(jax.random.PRNGKey(spec["seed"]), ref)
+    T = ref.layers[0].column.wave.T
+    kmax = max(ks)
+    x_all = jax.random.randint(
+        jax.random.PRNGKey(spec["seed"] ^ 0x5CA4),
+        (kmax, spec["B"], spec["C"], spec["p1"]), 0, T + 1, jnp.int8)
+    rng0 = jax.random.PRNGKey(spec["seed"] ^ 0x7A7E)
+    # the scan's keys are chained splits of rng0, so the K-wave prefix of
+    # the kmax-wave chain is the K-wave chain — one reference run covers
+    # every K in ks
+    _, subs_all = superbatch_keys(rng0, kmax)
+
+    # sequential direct reference: K single-wave train steps on the SAME
+    # pre-split keys
+    seq_z, seq_params, ps = [], {0: params0}, params0
+    for i in range(kmax):
+        outs, ps = network_train_step(x_all[i], ps, ref, subs_all[i])
+        seq_z.append([np.asarray(z) for z in outs])
+        seq_params[i + 1] = ps
+
+    for impl in ("direct", "pallas", "fused"):
+        icfg = with_impl(ref, impl)
+        for K in ks:
+            outs_k, new_ps = network_train_superbatch(
+                x_all[:K], params0, icfg, subs_all[:K])
+            for layer, zk in enumerate(outs_k):
+                for i in range(K):
+                    np.testing.assert_array_equal(
+                        np.asarray(zk[i]), seq_z[i][layer],
+                        err_msg=f"{impl} K={K} wave {i} layer {layer}")
+            for li, (a, b) in enumerate(zip(new_ps, seq_params[K])):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{impl} K={K} weights layer {li}")
+
+    # forward-only: the superbatch classify readout is per-uid identical
+    # to classifying each wave's single-wave forward (classify is
+    # row-independent, so serving parity reduces to this)
+    n_classes = 4
+    labels = jax.random.randint(
+        jax.random.PRNGKey(spec["seed"] ^ 0xC1A5), (spec["B"],),
+        0, n_classes)
+    vt = build_vote_table(
+        network_forward(x_all[0], params0, ref)[-1], labels, n_classes, T)
+    preds_ref = [
+        np.asarray(classify(network_forward(x_all[i], params0, ref)[-1],
+                            vt, T, soft=True))
+        for i in range(kmax)]
+    for impl in ("direct", "pallas", "fused"):
+        z_k = network_forward_superbatch(
+            x_all, params0, with_impl(ref, impl))[-1]
+        for i in range(kmax):
+            np.testing.assert_array_equal(
+                np.asarray(classify(z_k[i], vt, T, soft=True)),
+                preds_ref[i], err_msg=f"{impl} classify wave {i}")
+
+    if fused_wave_capable(ref):
+        fused = with_impl(ref, "fused")
+        assert pallas_launch_count(
+            lambda xk, kk: network_train_superbatch(
+                xk, params0, fused, kk)[1][0],
+            x_all, subs_all) == 1
+        assert pallas_launch_count(
+            lambda xk: network_forward_superbatch(xk, params0, fused)[-1],
+            x_all) == 1

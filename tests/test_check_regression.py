@@ -1,0 +1,109 @@
+"""Self-test for benchmarks/check_regression.py — the gate every CI bench
+artifact passes through. Covers the tolerance math at its boundary
+(``ratio < 1 - tol`` is strict), missing-row and new-row behavior, the
+empty-baseline refusal, and the BENCH_TOL environment override."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mod():
+    path = os.path.join(ROOT, "benchmarks", "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write(tmp_path, name, rows):
+    """rows: {row_name: waves_per_s | None} — None emits a row WITHOUT the
+    gated metric (must be ignored by the check)."""
+    payload = {"meta": {"smoke": True}, "rows": [
+        {"name": n, "us_per_call": 1.0,
+         "derived": {} if v is None else {"waves_per_s": v}}
+        for n, v in rows.items()]}
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _run(monkeypatch, baseline, current, *extra):
+    mod = _mod()
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression.py", baseline, current, *extra])
+    return mod.main()
+
+
+def test_within_tolerance_passes(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", {"a": 100.0, "b": 50.0})
+    cur = _write(tmp_path, "cur.json", {"a": 80.0, "b": 51.0})
+    assert _run(monkeypatch, base, cur) == 0  # 20% < default tol 25%
+
+
+def test_regression_beyond_tolerance_fails(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", {"a": 100.0})
+    cur = _write(tmp_path, "cur.json", {"a": 70.0})
+    assert _run(monkeypatch, base, cur) == 1  # 30% > 25%
+
+
+def test_boundary_is_strict(tmp_path, monkeypatch):
+    """ratio == 1 - tol passes; only STRICTLY below fails."""
+    base = _write(tmp_path, "base.json", {"a": 100.0})
+    at = _write(tmp_path, "at.json", {"a": 75.0})
+    below = _write(tmp_path, "below.json", {"a": 74.999})
+    assert _run(monkeypatch, base, at) == 0
+    assert _run(monkeypatch, base, below) == 1
+
+
+def test_tol_flag_and_env_override(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", {"a": 100.0})
+    cur = _write(tmp_path, "cur.json", {"a": 65.0})
+    assert _run(monkeypatch, base, cur) == 1  # 35% > default
+    assert _run(monkeypatch, base, cur, "--tol", "0.4") == 0
+    monkeypatch.setenv("BENCH_TOL", "0.4")
+    assert _run(monkeypatch, base, cur) == 0  # env sets the default
+    # an explicit --tol still beats the env default
+    assert _run(monkeypatch, base, cur, "--tol", "0.25") == 1
+
+
+def test_missing_baseline_row_fails(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", {"a": 100.0, "gone": 10.0})
+    cur = _write(tmp_path, "cur.json", {"a": 100.0})
+    assert _run(monkeypatch, base, cur) == 1
+
+
+def test_new_current_rows_are_ignored(tmp_path, monkeypatch):
+    """Rows only in the current run (e.g. a freshly added bench) never
+    fail — they become gated once the baseline is refreshed."""
+    base = _write(tmp_path, "base.json", {"a": 100.0})
+    cur = _write(tmp_path, "cur.json", {"a": 100.0, "brand_new": 1.0})
+    assert _run(monkeypatch, base, cur) == 0
+
+
+def test_speedups_never_fail(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", {"a": 100.0})
+    cur = _write(tmp_path, "cur.json", {"a": 500.0})
+    assert _run(monkeypatch, base, cur) == 0
+
+
+def test_empty_or_metricless_baseline_fails(tmp_path, monkeypatch):
+    """A baseline with NO gated rows is a broken gate, not a pass."""
+    cur = _write(tmp_path, "cur.json", {"a": 100.0})
+    empty = _write(tmp_path, "empty.json", {})
+    assert _run(monkeypatch, empty, cur) == 1
+    # rows that lack the waves_per_s metric don't count as gated rows
+    metricless = _write(tmp_path, "metricless.json", {"a": None, "b": None})
+    assert _run(monkeypatch, metricless, cur) == 1
+
+
+def test_metricless_rows_are_not_compared(tmp_path, monkeypatch):
+    """Non-throughput rows (no waves_per_s) ride along ungated in both
+    files — only the gated metric is compared."""
+    base = _write(tmp_path, "base.json", {"a": 100.0, "info": None})
+    cur = _write(tmp_path, "cur.json", {"a": 100.0})  # "info" dropped: fine
+    assert _run(monkeypatch, base, cur) == 0

@@ -1,0 +1,103 @@
+"""Direct unit tests for tools/loadgen.py (DESIGN.md §12): Poisson arrival
+determinism under a fixed seed, input validation, and request accounting in
+both the closed-loop (full backlog) and open-loop (arrival clock) drivers —
+every submitted request must be served exactly once and show up in the
+engine's stats."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _loadgen():
+    tools = os.path.join(ROOT, "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    import loadgen
+    return loadgen
+
+
+# -- poisson_arrivals --------------------------------------------------------
+
+
+def test_poisson_arrivals_deterministic_per_seed():
+    lg = _loadgen()
+    a = lg.poisson_arrivals(200.0, 1.0, seed=3)
+    b = lg.poisson_arrivals(200.0, 1.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    c = lg.poisson_arrivals(200.0, 1.0, seed=4)
+    assert a.shape != c.shape or not np.array_equal(a, c)
+
+
+def test_poisson_arrivals_sorted_and_in_window():
+    lg = _loadgen()
+    a = lg.poisson_arrivals(500.0, 2.0, seed=0)
+    assert a.ndim == 1 and a.dtype == np.float64
+    assert np.all(np.diff(a) >= 0)  # monotone arrival clock
+    assert np.all((a > 0) & (a < 2.0))  # truncated at the horizon
+    # E[n] = rate * duration; a 1000-arrival process stays within ~20%
+    assert 0.8 * 1000 < len(a) < 1.2 * 1000
+
+
+def test_poisson_arrivals_rejects_bad_args():
+    lg = _loadgen()
+    for rate, dur in ((0.0, 1.0), (-5.0, 1.0), (100.0, 0.0), (100.0, -1.0)):
+        with pytest.raises(ValueError, match="rate_hz"):
+            lg.poisson_arrivals(rate, dur)
+
+
+# -- closed / open loop accounting ------------------------------------------
+
+
+def _small_engine(lg, slots=4):
+    return lg.build_engine(sites=4, slots=slots, impl="direct", depth=2)
+
+
+def test_closed_loop_accounting_and_mode_parity():
+    """run_closed_loop serves every submitted uid exactly once, the stats
+    count all of them, and the pipelined and lock-step drivers agree
+    per-uid on the same warm engine."""
+    lg = _loadgen()
+    eng = _small_engine(lg)
+    imgs = lg.test_images(4, 10)
+
+    st = lg.run_closed_loop(eng, imgs, 10, pipelined=False)
+    assert st.requests == 10
+    assert st.waves == 3  # ceil(10 / 4)
+    assert sorted(eng.done) == list(range(10))
+    assert all(eng.done[u].result is not None for u in eng.done)
+    assert all(eng.done[u].latency_s is not None for u in eng.done)
+    lock = [eng.done[u].result for u in range(10)]
+    assert st.occupancy == pytest.approx(10 / (3 * 4))
+
+    eng.reset()
+    assert eng.stats().requests == 0  # reset clears the serve record
+    st2 = lg.run_closed_loop(eng, imgs, 10, pipelined=True)
+    assert st2.requests == 10 and sorted(eng.done) == list(range(10))
+    assert [eng.done[u].result for u in range(10)] == lock
+
+
+def test_open_loop_accounting():
+    """run_open_loop serves exactly the arrival set — no request dropped or
+    duplicated even when service interleaves with admission — and the
+    image cycling (uid % len(images)) keeps results deterministic."""
+    lg = _loadgen()
+    eng = _small_engine(lg)
+    imgs = lg.test_images(4, 8)
+    # compress the clock so the test is fast: a short dense burst
+    arrivals = lg.poisson_arrivals(400.0, 0.25, seed=0)
+    assert len(arrivals) > 0
+    st = lg.run_open_loop(eng, imgs, arrivals)
+    assert st.requests == len(arrivals)
+    assert sorted(eng.done) == list(range(len(arrivals)))
+    assert eng.pending == 0
+    assert all(eng.done[u].result is not None for u in eng.done)
+    # per-uid results match a closed-loop drain of the same uid->image map
+    ref = _small_engine(lg)
+    st_ref = lg.run_closed_loop(ref, imgs, len(arrivals), pipelined=False)
+    assert ([eng.done[u].result for u in sorted(eng.done)] ==
+            [ref.done[u].result for u in sorted(ref.done)])
+    assert st_ref.requests == st.requests

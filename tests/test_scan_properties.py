@@ -1,0 +1,137 @@
+"""K-wave scan-loop properties (DESIGN.md §13), driven by the
+tests/proptest.py harness: training K gamma waves through the on-device
+``lax.scan`` superbatch is bit-exact with K sequential single-wave steps —
+per-wave per-layer spike times, final weights, the rng chain and the wave
+counter — over sampled depth-1..4 cascades, for every backend and
+K in {1, 2, 5}; the forward-only superbatch's classify readout matches the
+per-wave readout per-uid; and a fused-capable cascade's whole K-wave
+dispatch traces exactly ONE ``pallas_call`` equation at K=16.
+
+CI runs this module as a dedicated step with a fixed seed and a raised
+randomized budget (``PROPTEST_SEED`` / ``PROPTEST_CASES``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import (
+    assert_scan_parity,
+    build_network,
+    cases,
+    env_budget,
+    topology_specs,
+)
+from repro.configs.tnn_mnist import default_thetas, network_config
+from repro.core import (
+    init_network,
+    init_train_state,
+    make_superbatch_step,
+    make_train_step,
+    network_train_superbatch,
+    superbatch_keys,
+    with_impl,
+)
+from repro.kernels.padding import fused_wave_capable
+from repro.utils.tracing import pallas_launch_count
+
+
+@cases(n=env_budget(6), spec=topology_specs(max_depth=4))
+def test_randomized_scan_parity(spec):
+    """THE property: for any sampled cascade (depth 1-4, odd extents,
+    fusable or not), scan(K) training is bit-exact with K sequential
+    single-wave steps across direct/pallas/fused for K in {1, 2, 5}, the
+    forward-only superbatch classify matches per-wave classify per-uid,
+    and fused-capable draws dispatch the whole superbatch as ONE launch."""
+    assert_scan_parity(spec, ks=(1, 2, 5))
+
+
+def test_superbatch_keys_match_sequential_chain():
+    """The bit-exactness hinge: ``superbatch_keys`` must pre-split the SAME
+    key chain the sequential train step consumes — ``split(rng)`` per wave,
+    carrying the first output forward — not an unrelated K-way split."""
+    rng = jax.random.PRNGKey(7)
+    key, subs = superbatch_keys(rng, 5)
+    k = jax.random.PRNGKey(7)
+    for i in range(5):
+        k, sub = jax.random.split(k)
+        np.testing.assert_array_equal(np.asarray(subs[i]), np.asarray(sub))
+    np.testing.assert_array_equal(np.asarray(key), np.asarray(k))
+    # and the K-wave chain is a prefix of any longer chain (what makes
+    # checkpoint resume K-agnostic)
+    _, subs3 = superbatch_keys(rng, 3)
+    np.testing.assert_array_equal(np.asarray(subs3), np.asarray(subs[:3]))
+
+
+@pytest.mark.parametrize("impl", ["direct", "fused"])
+def test_superbatch_step_matches_k_sequential_steps(impl):
+    """The production dispatch: ``make_superbatch_step`` over K waves
+    leaves the SAME state (weights, rng, wave counter) as K calls of
+    ``make_train_step`` and returns every wave's last-layer spike times."""
+    sites = 4
+    theta1, theta2 = default_thetas(sites)
+    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                         impl=impl)
+    T = cfg.layers[0].column.wave.T
+    K, B = 3, 4
+    x_k = jax.random.randint(
+        jax.random.PRNGKey(1), (K, B, sites, cfg.layers[0].column.p),
+        0, T + 1, jnp.int8)
+    step = make_train_step(cfg, donate=False)
+    sstep = make_superbatch_step(cfg, donate=False)
+    s_seq = init_train_state(jax.random.PRNGKey(0), cfg)
+    seq_z = []
+    for i in range(K):
+        s_seq, z = step(s_seq, x_k[i])
+        seq_z.append(np.asarray(z))
+    s_sb, z_k = sstep(init_train_state(jax.random.PRNGKey(0), cfg), x_k)
+    assert int(s_sb["wave"]) == int(s_seq["wave"]) == K
+    np.testing.assert_array_equal(np.asarray(s_sb["rng"]),
+                                  np.asarray(s_seq["rng"]))
+    for name in s_seq["params"]:
+        np.testing.assert_array_equal(np.asarray(s_sb["params"][name]),
+                                      np.asarray(s_seq["params"][name]))
+    assert z_k.shape[0] == K
+    for i in range(K):
+        np.testing.assert_array_equal(np.asarray(z_k[i]), seq_z[i])
+
+
+def test_fused_superbatch_is_one_launch_at_k16():
+    """The acceptance number: a fused K=16 superbatch training dispatch
+    traces exactly ONE pallas launch — the scan body holds the single
+    megakernel, amortized over all 16 gamma waves."""
+    spec = {"C": 2, "p1": 9, "qs": (6, 5), "thetas": (5, 4), "T": 8,
+            "B": 3, "seed": 16, "break_wave_at": None}
+    ref = build_network(spec)
+    assert fused_wave_capable(ref)
+    fused = with_impl(ref, "fused")
+    params = init_network(jax.random.PRNGKey(0), ref)
+    x_k = jax.random.randint(jax.random.PRNGKey(1), (16, 3, 2, 9), 0, 9,
+                             jnp.int8)
+    _, subs = superbatch_keys(jax.random.PRNGKey(2), 16)
+    assert pallas_launch_count(
+        lambda xk, kk: network_train_superbatch(xk, params, fused, kk)[1][0],
+        x_k, subs) == 1
+    # per-layer pallas pays 2 launches per LAYER inside the same scan body
+    pallas = with_impl(ref, "pallas")
+    assert pallas_launch_count(
+        lambda xk, kk: network_train_superbatch(xk, params, pallas, kk)[1][0],
+        x_k, subs) == 2 * len(ref.layers)
+
+
+def test_make_superbatch_step_rejects_mean_reduce():
+    """Guard: the scan path inherits make_train_step's counter-form
+    contract — batch_reduce must be "sum" (shard-additive deltas)."""
+    import dataclasses
+
+    sites = 4
+    theta1, theta2 = default_thetas(sites)
+    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2)
+    bad = dataclasses.replace(
+        cfg, layers=tuple(
+            dataclasses.replace(l, column=dataclasses.replace(
+                l.column, stdp=dataclasses.replace(
+                    l.column.stdp, batch_reduce="mean")))
+            for l in cfg.layers))
+    with pytest.raises(ValueError, match="sum"):
+        make_superbatch_step(bad)

@@ -91,6 +91,44 @@ def test_pipelined_matches_lockstep(depth, impl):
     assert results[0] == results[1]
 
 
+@pytest.mark.parametrize("impl", ["direct", "fused"])
+def test_superbatch_drain_matches_lockstep(impl):
+    """A deep backlog served with superbatch_k > 1 (up to K x n_slots
+    requests retired per dispatch through the on-device K-wave scan,
+    DESIGN.md §13) must produce identical per-uid results — and the same
+    wave/occupancy accounting — as the lock-step single-wave reference.
+    Partial final wave included; latency samples stay per-request."""
+    n_req = 11  # not a slot multiple: the superbatch's last wave is partial
+    test_imgs = crop_field(digits(n_req, seed=2)[0], SITES)
+
+    def run(superbatch_k, pipelined):
+        cfg = launcher_network_config(SITES, depth=2, impl=impl)
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        imgs, labs = digits(16, seed=1)
+        eng = TNNEngine(cfg, params, n_slots=4, impl=impl,
+                        superbatch_k=superbatch_k)
+        eng.fit(crop_field(imgs, SITES), labs)
+        _submit_all(eng, test_imgs, n_req)
+        done = eng.run_until_done(pipelined=pipelined)
+        assert sorted(done) == list(range(n_req))
+        return [done[u].result for u in range(n_req)], eng.stats()
+
+    ref, st_ref = run(1, False)
+    for k in (2, 8):  # k=8 covers K > backlog/slots: clamped to the need
+        got, st = run(k, True)
+        assert got == ref
+        assert st.waves == st_ref.waves == 3  # ceil(11 / 4), K-invariant
+        assert st.requests == n_req
+        assert st.occupancy == st_ref.occupancy
+
+
+def test_engine_rejects_bad_superbatch_k():
+    cfg = launcher_network_config(SITES, depth=2, impl="direct")
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="superbatch_k"):
+        TNNEngine(cfg, params, n_slots=4, superbatch_k=0)
+
+
 def test_pipelined_matches_lockstep_from_checkpoint(tmp_path):
     """Warm-started engines (weights + vote table from a training
     checkpoint) serve identically pipelined and lock-step."""

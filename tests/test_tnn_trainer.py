@@ -289,6 +289,91 @@ def test_trainer_metrics_handle_closed_on_exception(tmp_path):
     t2.close()  # second close is a no-op
 
 
+def test_trainer_superbatch_matches_lockstep(tmp_path):
+    """A superbatch_k=4 run ends bit-identical to the lock-step loop —
+    same weights, rng chain, wave counter, vote table and accuracy
+    (DESIGN.md §13: the scan is an execution strategy, not a semantics
+    change)."""
+    cfg = _cfg()
+    dir_a, dir_b = str(tmp_path / "lockstep"), str(tmp_path / "scan")
+    out_a = TNNTrainer(cfg, _tcfg(dir_a, epochs=2)).run()
+    out_b = TNNTrainer(cfg, _tcfg(dir_b, epochs=2, superbatch_k=4)).run()
+    assert out_a["final_wave"] == out_b["final_wave"] == 8
+    sa, _ = restore_tnn(Checkpointer(dir_a), cfg)
+    sb, _ = restore_tnn(Checkpointer(dir_b), cfg)
+    _assert_states_equal(sa, sb)
+    np.testing.assert_array_equal(np.asarray(sa["vote_table"]),
+                                  np.asarray(sb["vote_table"]))
+    assert out_a["accuracy"] == out_b["accuracy"]
+    # K larger than the run: chunks clamp at epoch ends, same bits
+    dir_c = str(tmp_path / "scan-big-k")
+    out_c = TNNTrainer(cfg, _tcfg(dir_c, epochs=2, superbatch_k=64)).run()
+    sc, _ = restore_tnn(Checkpointer(dir_c), cfg)
+    _assert_states_equal(sa, sc)
+    assert out_a["accuracy"] == out_c["accuracy"]
+
+
+def test_trainer_superbatch_resume_is_k_agnostic(tmp_path):
+    """N waves at superbatch_k=4 -> save -> restore -> M waves at
+    superbatch_k=1 == N+M lock-step straight through: the scan pre-splits
+    the SAME rng chain the sequential step consumes, so the checkpoint
+    carries no trace of the chunking it was written under."""
+    cfg = _cfg()
+    dir_a, dir_b = str(tmp_path / "straight"), str(tmp_path / "mixed")
+
+    out_a = TNNTrainer(cfg, _tcfg(dir_a, epochs=2)).run()
+    assert out_a["final_wave"] == 8
+
+    TNNTrainer(cfg, _tcfg(dir_b, epochs=1, superbatch_k=4)).run()
+    out_b = TNNTrainer(cfg, _tcfg(dir_b, epochs=2, superbatch_k=1)).run()
+    assert out_b["final_wave"] == 8 and out_b["resumed"]
+
+    sa, _ = restore_tnn(Checkpointer(dir_a), cfg)
+    sb, _ = restore_tnn(Checkpointer(dir_b), cfg)
+    _assert_states_equal(sa, sb)
+    np.testing.assert_array_equal(np.asarray(sa["vote_table"]),
+                                  np.asarray(sb["vote_table"]))
+    assert out_a["accuracy"] == out_b["accuracy"]
+
+
+def test_trainer_superbatch_clamps_at_mid_cadence(tmp_path):
+    """Negative/boundary test: with ckpt_every=3 and superbatch_k=4 the
+    first chunk must CLAMP to 3 waves so the checkpoint lands at wave 3 —
+    not a multiple of K — and that mid-superbatch wave count round-trips:
+    resuming from it under superbatch_k=1 matches the straight lock-step
+    run bit for bit."""
+    cfg = _cfg()
+    dir_a, dir_b = str(tmp_path / "straight"), str(tmp_path / "clamped")
+
+    out_a = TNNTrainer(cfg, _tcfg(dir_a, epochs=2, ckpt_every=3)).run()
+    assert out_a["final_wave"] == 8
+
+    tr_b = TNNTrainer(cfg, _tcfg(dir_b, epochs=1, ckpt_every=3,
+                                 superbatch_k=4))
+    assert tr_b._chunk_k(0, 8) == 3   # clamped at the ckpt boundary
+    assert tr_b._chunk_k(3, 8) == 1   # then at the epoch end (wave 4)
+    assert tr_b._chunk_k(4, 8) == 2   # then at the next ckpt point (6)
+    tr_b.run()
+    ckpt_b = Checkpointer(dir_b)
+    assert 3 in ckpt_b.all_steps()  # the mid-K checkpoint exists at wave 3
+    s3, e3 = restore_tnn(ckpt_b, cfg, 3)
+    assert int(s3["wave"]) == e3["wave"] == 3  # and round-trips exactly
+
+    # drop the epoch-end checkpoint so resume starts from wave 3
+    shutil.rmtree(os.path.join(dir_b, "step_00000004"))
+    assert ckpt_b.latest_step() == 3
+    out_b = TNNTrainer(cfg, _tcfg(dir_b, epochs=2, ckpt_every=3)).run()
+    assert out_b["final_wave"] == 8 and out_b["resumed"]
+    sa, _ = restore_tnn(Checkpointer(dir_a), cfg)
+    sb, _ = restore_tnn(Checkpointer(dir_b), cfg)
+    _assert_states_equal(sa, sb)
+
+
+def test_trainer_rejects_bad_superbatch_k(tmp_path):
+    with pytest.raises(ValueError, match="superbatch_k"):
+        TNNTrainer(_cfg(), _tcfg(str(tmp_path), superbatch_k=0))
+
+
 def test_wave_stream_deterministic_and_wraps():
     cfg = _cfg()
     s1 = WaveStream(cfg, n=10, wave_batch=4, seed=1)
@@ -297,6 +382,11 @@ def test_wave_stream_deterministic_and_wraps():
     # wrap-around stays in range and deterministic
     np.testing.assert_array_equal(s1.batch_at(7), s1.batch_at(7))
     assert s1.batch_at(0).shape == (4, SITES, cfg.layers[0].column.p)
+    # a superbatch slice IS the sequential batches, stacked (§13)
+    sb = s1.superbatch_at(2, 3)
+    assert sb.shape == (3, 4, SITES, cfg.layers[0].column.p)
+    for i in range(3):
+        np.testing.assert_array_equal(sb[i], s1.batch_at(2 + i))
 
 
 def test_tnn_abstract_state_shapes():

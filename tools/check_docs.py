@@ -28,6 +28,12 @@ Three checks, all run by CI next to the tier-1 pytest run:
    (``launch/serve.py --lockstep``, ``benchmarks/run.py --serve``) must
    exist, ``tools/loadgen.py`` must exist, and the README must show the
    load-generation quickstart.
+6. **§13 anchors + the superbatch flag.** DESIGN.md §13 (the on-device
+   K-wave scan loop) must keep its anchor topics — donation, key
+   pre-split, boundary semantics — the ``--superbatch-k`` flag it
+   documents must exist in BOTH ``launch/train.py`` and
+   ``launch/serve.py``, and the README must show the superbatch
+   quickstart.
 
 Run from the repo root:
 
@@ -190,6 +196,40 @@ def check_section12_serving(root: pathlib.Path) -> list:
     return problems
 
 
+# §13 is the K-wave scan-loop section; these topics are its contract with
+# core/network.py (make_superbatch_step) + the trainer/engine and must stay.
+SECTION13_ANCHORS = ("donation", "key pre-split", "boundary semantics")
+SUPERBATCH_FLAG = "--superbatch-k"
+
+
+def check_section13_superbatch(root: pathlib.Path) -> list:
+    """DESIGN.md §13 must exist with its anchor topics; the
+    ``--superbatch-k`` flag it documents must exist in both launchers; and
+    the README must show the superbatch quickstart."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§13\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append("DESIGN.md: no §13 section (K-wave scan loop)")
+    else:
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION13_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §13: missing anchor topic {anchor!r}")
+    for rel in LAUNCHERS:
+        if f'"{SUPERBATCH_FLAG}"' not in (root / rel).read_text():
+            problems.append(
+                f"{rel}: missing {SUPERBATCH_FLAG} flag (DESIGN.md §13 "
+                f"documents it)")
+    if SUPERBATCH_FLAG not in (root / "README.md").read_text():
+        problems.append(
+            f"README.md: never mentions {SUPERBATCH_FLAG} — the §13 "
+            f"superbatch quickstart must show it")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -216,9 +256,10 @@ def main() -> int:
     launcher_problems = check_launcher_impls(root)
     s11_problems = check_section11_and_factory(root)
     s12_problems = check_section12_serving(root)
+    s13_problems = check_section13_superbatch(root)
 
     if (dangling or backend_problems or launcher_problems or s11_problems
-            or s12_problems):
+            or s12_problems or s13_problems):
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -239,12 +280,17 @@ def main() -> int:
             print("check_docs: §12 / serving problems:", file=sys.stderr)
             for p in s12_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s13_problems:
+            print("check_docs: §13 / superbatch problems:", file=sys.stderr)
+            for p in s13_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
           f"names only accepted impls; launcher --impl choices match "
           f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact; "
-          f"§12 anchors + serving flags + loadgen intact")
+          f"§12 anchors + serving flags + loadgen intact; §13 anchors + "
+          f"{SUPERBATCH_FLAG} launcher flags intact")
     return 0
 
 
