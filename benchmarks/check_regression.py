@@ -8,7 +8,9 @@ rows never fail. Used by the CI ``bench`` job:
 
     python benchmarks/check_regression.py benchmarks/baseline.json bench.json
 
-Exit 0 = within tolerance; 1 = regression or missing row (listed). The
+Exit 0 = within tolerance; 1 = regression or missing row (listed). When
+the current run carries roofline-vs-measured rows (``for_row`` derived
+key), each failing row is printed next to its machine-model bound. The
 tolerance can be widened via ``--tol 0.4`` or ``BENCH_TOL=0.4`` for noisy
 runners. The comparison is hardware-relative: refresh the baseline by
 committing a green CI run's ``bench.json`` artifact, so baseline and
@@ -36,6 +38,27 @@ def _rows(path: str) -> Dict[str, float]:
     }
 
 
+def _roofline_bounds(path: str) -> Dict[str, Dict]:
+    """Map gated-row name -> the current run's roofline cell for it.
+
+    ``benchmarks/run.py``'s roofline-vs-measured rows carry a ``for_row``
+    derived key naming the waves/sec row each analytic bound explains
+    (DESIGN.md §14); a failing row is printed next to its machine-model
+    bound so "regressed" can be told apart from "was never near the roof".
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    out: Dict[str, Dict] = {}
+    for r in data.get("rows", []):
+        d = r.get("derived", {})
+        if d.get("for_row") and "bound_us" in d:
+            out[d["for_row"]] = {**d, "us_per_call": r.get("us_per_call")}
+    return out
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
@@ -47,6 +70,7 @@ def main() -> int:
 
     base = _rows(args.baseline)
     cur = _rows(args.current)
+    bounds = _roofline_bounds(args.current)
     if not base:
         print(f"check_regression: no {METRIC} rows in {args.baseline}",
               file=sys.stderr)
@@ -73,6 +97,13 @@ def main() -> int:
               file=sys.stderr)
         for msg in failures:
             print(f"  {msg}", file=sys.stderr)
+            b = bounds.get(msg.split(":", 1)[0])
+            if b:
+                print(f"    roofline ({b.get('profile', '?')}): "
+                      f"{b.get('bottleneck', '?')}-bound >= "
+                      f"{b['bound_us'] / 1e3:.3f} ms/dispatch; this run "
+                      f"measured {b.get('frac_of_bound', 0):.1%} of bound",
+                      file=sys.stderr)
         return 1
     print(f"\ncheck_regression: OK — {len(base)} {METRIC} rows within "
           f"{100 * args.tol:.0f}% of baseline")

@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Render the roofline-vs-measured table from a ``run.py --json`` artifact.
+
+    python benchmarks/roofline_report.py bench.json > roofline-report.md
+
+Selects the ``tnn_roofline_*`` rows (the per impl x depth x K analytic
+bounds ``tnn_roofline_vs_measured`` records against the ``cpu-host``
+machine profile, DESIGN.md §14) and emits one markdown table — the CI
+bench job uploads it as the ``roofline-report`` artifact so a throughput
+regression can be read next to the machine-model bound without
+downloading the full JSON. Exit 1 when the artifact has no roofline rows
+(the bench ran a mode that skips the section).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PREFIX = "tnn_roofline_"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        data = json.load(f)
+    rows = [r for r in data.get("rows", []) if r["name"].startswith(PREFIX)]
+    if not rows:
+        raise SystemExit(f"roofline_report: no {PREFIX}* rows in {path}")
+    profile = rows[0]["derived"].get("profile", "?")
+    out = [f"## Roofline vs measured (`{profile}` profile)\n",
+           "Per (impl x depth x K): analytic bound of the compiled K-wave "
+           "superbatch dispatch vs its measured wall time (DESIGN.md §14). "
+           "`for row` names the regression-gated waves/sec row the cell "
+           "explains.\n",
+           "| cell | bound ms | measured ms | % of bound | bottleneck | "
+           "useful | for row |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        d = r["derived"]
+        out.append(
+            f"| {r['name'][len(PREFIX):]} | {d['bound_us'] / 1e3:.3f} | "
+            f"{r['us_per_call'] / 1e3:.3f} | {100 * d['frac_of_bound']:.1f}% "
+            f"| {d['bottleneck']} | {100 * d['useful']:.1f}% | "
+            f"`{d['for_row']}` |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="a benchmarks/run.py --json artifact")
+    args = ap.parse_args()
+    print(render(args.bench_json))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

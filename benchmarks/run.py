@@ -32,6 +32,21 @@ System benches (this framework beyond the paper):
                           ``--serve`` emits the full direct/pallas/fused x
                           depth {2,3} grid plus lock-step comparisons and
                           an open-loop Poisson latency probe.
+  tnn_roofline_vs_measured — per (impl x depth x K): compile the K-wave
+                          superbatch dispatch, run ``cost_analysis()`` +
+                          HLO-text collective parsing through
+                          ``repro.roofline.analysis.from_compiled``
+                          against the ``cpu-host`` machine profile, and
+                          print the analytic bound next to the measured
+                          wall time (DESIGN.md §14). Each row's
+                          ``for_row`` names the gated waves/sec row it
+                          explains — ``check_regression.py`` prints the
+                          bound next to failing rows.
+  tnn_packed_wave_bytes — HLO bytes-accessed of the fused volley under
+                          the packed (uint8/int8) vs i32-boundary plan on
+                          matched geometry (asserts the >= 2x contract)
+                          plus the gated ``tnn_packed_wave_throughput``
+                          row on the tuned plan.
   lm_step_micro         — smoke-config LM train-step wall time (tokens/s).
   roofline_summary      — aggregates experiments/dryrun JSONs.
 
@@ -264,7 +279,7 @@ def tnn_train_throughput(smoke: bool = False,
         T = cfg.layers[0].column.wave.T
         x = jax.random.randint(
             jax.random.PRNGKey(1), (B, sites, cfg.layers[0].column.p),
-            0, T + 1, dtype=jnp.int8)
+            0, T + 1, dtype=jnp.uint8)
         us = _timeit(lambda: jax.block_until_ready(step(state, x)[1]),
                      n=3 if smoke else 5)
         wps[impl] = 1e6 / us
@@ -339,7 +354,7 @@ def tnn_scan_throughput(smoke: bool = False,
             x_k = jax.random.randint(
                 jax.random.PRNGKey(1),
                 (K, B, sites, cfg.layers[0].column.p),
-                0, T + 1, dtype=jnp.int8)
+                0, T + 1, dtype=jnp.uint8)
             launches = pallas_launch_count(step, state, x_k)
             if impl == "fused":
                 assert launches == 1, (
@@ -364,6 +379,166 @@ def tnn_scan_throughput(smoke: bool = False,
         us_headline = kmax * 1e6 / wps["fused"][kmax]
         _emit("tnn_scan_throughput", us_headline,
               waves_per_s=round(wps["fused"][kmax], 3), k=kmax)
+
+
+def tnn_roofline_vs_measured(smoke: bool = False,
+                             impls: tuple = ("direct", "pallas", "fused"),
+                             ks: tuple = (1, 4, 16),
+                             depths: tuple = (2, 3)) -> None:
+    """Roofline-vs-measured for the ACTUAL compiled K-wave dispatch
+    (DESIGN.md §14): per (impl x depth x K), lower+compile the superbatch
+    train step, feed ``compiled.cost_analysis()`` + the post-SPMD HLO text
+    through :func:`repro.roofline.analysis.from_compiled` against the
+    ``cpu-host`` machine profile, and print the analytic bound next to the
+    measured wall time of the same compiled dispatch.
+
+    ``frac_of_bound`` = bound/measured is the honest "how far from the
+    machine's ceiling" number; ``for_row`` names the regression-gated
+    waves/sec row the cell explains, so ``check_regression.py`` can print
+    the bound next to a failing row. model_flops = 2*K*B*synapses (one
+    MAC per synapse per wave) — the algorithmic work, so useful% exposes
+    padding/remat waste in the compiled module.
+
+    XLA's ``cost_analysis`` counts a scan body ONCE no matter the trip
+    count (same caveat as the dry-run tables), so the K-wave dispatch is
+    modelled as K x the compiled K=1 module — one compile per
+    (impl, depth), exact at K=1, and it only ignores the per-dispatch
+    setup that the scan exists to amortize anyway.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import (
+        deep_config, default_thetas, network_config,
+    )
+    from repro.core import init_train_state, make_superbatch_step
+    from repro.roofline.analysis import CPU_HOST, Roofline, from_compiled
+
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16" if smoke else "625"))
+    B = 8 if smoke else 16
+    theta1, theta2 = default_thetas(sites)
+    print(f"\n== roofline vs measured: compiled K-wave dispatch "
+          f"({sites}+... columns, batch {B}, profile {CPU_HOST.name}, "
+          f"depths {depths}, K in {ks}) ==")
+    print(f"{'cell':24s} {'bound ms':>9s} {'measured ms':>12s} "
+          f"{'%of bound':>9s} {'bottleneck':>10s} {'useful%':>8s}")
+    for depth in depths:
+        for impl in impls:
+            if depth == 2:
+                cfg = network_config(sites=sites, theta1=theta1,
+                                     theta2=theta2, impl=impl)
+            else:
+                cfg = deep_config(sites=sites, impl=impl)
+            step = make_superbatch_step(cfg, donate=False)
+            T = cfg.layers[0].column.wave.T
+            synapses = sum(l.n_cols * l.column.p * l.column.q
+                           for l in cfg.layers)
+
+            def _xk(K):
+                return jax.random.randint(
+                    jax.random.PRNGKey(1),
+                    (K, B, sites, cfg.layers[0].column.p),
+                    0, T + 1, dtype=jnp.uint8)
+
+            state = init_train_state(jax.random.PRNGKey(0), cfg)
+            r1 = from_compiled(step.lower(state, _xk(1)).compile(),
+                               2.0 * B * synapses, default_group=1,
+                               profile=CPU_HOST)
+            for K in ks:
+                roof = Roofline(
+                    flops=K * r1.flops,
+                    bytes_accessed=K * r1.bytes_accessed,
+                    collective_bytes=K * r1.collective_bytes,
+                    model_flops=2.0 * K * B * synapses,
+                    collectives=r1.collectives, profile=CPU_HOST)
+                x_k = _xk(K)
+                us = _timeit_min(
+                    lambda: jax.block_until_ready(step(state, x_k)[1]),
+                    n=3 if smoke else 5)
+                bound_us = roof.t_bound * 1e6
+                frac = bound_us / max(us, 1e-9)
+                cell = f"{impl}_d{depth}_k{K}"
+                print(f"{cell:24s} {bound_us/1e3:9.3f} {us/1e3:12.3f} "
+                      f"{frac:8.1%} {roof.bottleneck:>10s} "
+                      f"{roof.useful_flop_fraction:7.1%}")
+                for_row = (f"tnn_scan_k{K}_{impl}" if depth == 2
+                           else f"tnn_train_deep3_{impl}")
+                _emit(f"tnn_roofline_{cell}", us,
+                      bound_us=round(bound_us, 3),
+                      frac_of_bound=round(frac, 4),
+                      bottleneck=roof.bottleneck,
+                      useful=round(roof.useful_flop_fraction, 4),
+                      hlo_mb=round(roof.bytes_accessed / 1e6, 3),
+                      profile=CPU_HOST.name, for_row=for_row)
+
+
+def tnn_packed_wave_bytes(smoke: bool = False) -> None:
+    """Bytes-moved win of the packed data plane (DESIGN.md §14): compile
+    the fused forward volley under the packed plan (uint8 volleys / int8
+    weights at the kernel boundary) and under ``packed=False`` (the legacy
+    i32-at-the-boundary layout) on the SAME launch geometry, and compare
+    HLO bytes-accessed — the two programs are bit-exact, so the ratio is
+    pure data-plane width. Asserts the >= 2x contract.
+
+    Uses sites >= 64 even under ``--smoke``: at tiny geometries the
+    fixed-size RNL/WTA lookup tables dominate bytes and mask the volley
+    win. Also times the packed fused wave on its tuned plan and emits the
+    regression-gated ``tnn_packed_wave_throughput`` row.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core.network import init_network
+    from repro.kernels import padding as KP
+    from repro.kernels import tnn_wave as KW
+
+    sites = 64 if smoke else 625
+    B = 8 if smoke else 16
+    theta1, theta2 = default_thetas(sites)
+    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                         impl="fused")
+    params = tuple(init_network(jax.random.PRNGKey(0), cfg))
+    T = cfg.layers[0].column.wave.T
+    x = jax.random.randint(
+        jax.random.PRNGKey(1), (B, sites, cfg.layers[0].column.p),
+        0, T + 1, dtype=jnp.uint8)
+    print(f"\n== packed vs i32 fused volley: HLO bytes accessed "
+          f"({sites}+{sites} columns, batch {B}) ==")
+
+    def _bytes(plan):
+        comp = jax.jit(
+            lambda xb: KW.wave_forward(xb, params, plan=plan)).lower(
+                x).compile()
+        cost = comp.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict]
+            cost = cost[0]
+        return float(cost.get("bytes accessed", 0.0))
+
+    # Matched geometry (same block_b/p_align) so the ratio is dtype-only.
+    by = {p: _bytes(KP.network_plan(_dc.replace(cfg, packed=p), B,
+                                    block_b=8))
+          for p in (True, False)}
+    ratio = by[False] / max(by[True], 1.0)
+    print(f"packed {by[True]/1e3:10.1f} KB   i32 {by[False]/1e3:10.1f} KB   "
+          f"ratio {ratio:.2f}x")
+    assert ratio >= 2.0, (
+        f"packed fused volley moved only {ratio:.2f}x fewer HLO bytes than "
+        f"the i32 layout, want >= 2x (DESIGN.md §14)")
+    _emit("tnn_packed_bytes", 0.0, packed_kb=round(by[True] / 1e3, 1),
+          int32_kb=round(by[False] / 1e3, 1), ratio=round(ratio, 3))
+
+    # Throughput of the packed volley on its tuned plan — the gated row.
+    plan = KP.network_plan(cfg, B)
+    fwd = jax.jit(lambda xb: KW.wave_forward(xb, params, plan=plan))
+    us = _timeit_min(lambda: jax.block_until_ready(fwd(x)[-1]),
+                     n=5 if smoke else 8)
+    wps = 1e6 / us
+    print(f"packed fused volley: {us/1e3:9.1f} ms/wave = {wps:8.2f} waves/s "
+          f"(plan block_b={plan.pad.block_b}, p1 padded to "
+          f"{plan.pad.pp})")
+    _emit("tnn_packed_wave_throughput", us, waves_per_s=round(wps, 3),
+          images_per_s=round(B * wps, 1))
 
 
 def tnn_deep_wave_throughput(smoke: bool = False,
@@ -398,7 +573,7 @@ def tnn_deep_wave_throughput(smoke: bool = False,
         T = cfg.layers[0].column.wave.T
         x = jax.random.randint(
             jax.random.PRNGKey(1), (B, sites, cfg.layers[0].column.p),
-            0, T + 1, dtype=jnp.int8)
+            0, T + 1, dtype=jnp.uint8)
         params = init_network(jax.random.PRNGKey(0), cfg)
         wave = lambda xb, ps, kk: network_train_wave(xb, ps, cfg, kk)
         launches = pallas_launch_count(wave, x, params, jax.random.PRNGKey(2))
@@ -616,6 +791,8 @@ def main() -> None:
         tnn_wave_throughput(smoke=args.smoke, impls=impls)
         tnn_train_throughput(smoke=args.smoke, impls=impls)
         tnn_scan_throughput(smoke=args.smoke, impls=impls)
+        tnn_roofline_vs_measured(smoke=args.smoke, impls=impls)
+        tnn_packed_wave_bytes(smoke=args.smoke)
         tnn_serve_throughput(smoke=args.smoke, impls=impls,
                              headline_only=True)
         lm_step_micro(smoke=args.smoke)

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Reproducible CPU-fleet launcher: pins the process environment every
+# benchmark / training / serving number in this repo is recorded under, so
+# two hosts (or two weeks) produce comparable rows (DESIGN.md §14).
+#
+#   ./run.sh benchmarks/run.py --smoke --json bench.json
+#   ./run.sh -m repro.launch.train --arch tnn-mnist --smoke
+#   TNN_HOST_DEVICES=4 ./run.sh -m pytest tests/test_tnn_serving.py -x -q
+#
+# Everything after ./run.sh is handed to python verbatim.
+set -euo pipefail
+
+# tcmalloc when the container ships it: faster malloc under the allocator
+# churn of jit dispatch, and the report threshold silences the large-alloc
+# warnings numpy's image buffers otherwise trip. Skipped (not an error)
+# when the .so is absent.
+TCMALLOC_SO="${TCMALLOC_SO:-/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4}"
+if [[ -e "${TCMALLOC_SO}" ]]; then
+  export LD_PRELOAD="${TCMALLOC_SO}"
+  export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+
+# Quiet the TF/XLA C++ banner chatter that otherwise interleaves with the
+# benchmark CSV rows (callers can still lower it).
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# Host-device topology, fixed explicitly rather than left to detection:
+# TNN_HOST_DEVICES=N splits the host into N XLA devices (the shard_map
+# tests/serving paths use 4).
+TNN_HOST_DEVICES="${TNN_HOST_DEVICES:-1}"
+_flags="--xla_force_host_platform_device_count=${TNN_HOST_DEVICES}"
+# TPU profiling runs: TNN_STEP_MARKERS=1 puts step markers on the outer
+# while loop (0 = entry, 1 = outer while) so profiles bracket whole
+# dispatches — the unit every waves/sec row counts. Opt-in because the
+# CPU backend's XLA rejects the (TPU-only) flag at startup.
+if [[ "${TNN_STEP_MARKERS:-0}" == "1" ]]; then
+  _flags="--xla_step_marker_location=1 ${_flags}"
+fi
+export XLA_FLAGS="${_flags}${XLA_FLAGS:+ ${XLA_FLAGS}}"
+
+cd "$(dirname "$(readlink -f "$0")")"
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+exec python "$@"

@@ -105,21 +105,27 @@ def deep_config(sites: int = 625, widths=(12, 12, 10), thetas=None,
 
 
 def launcher_network_config(sites: int, depth: int = 2,
-                            impl: str = "direct"):
+                            impl: str = "direct", packed: bool = True):
     """The convention ``launch/train.py`` and ``launch/serve.py`` share for
     building the network from CLI flags — train and serve MUST build the
     same config or the checkpoint fingerprint refuses the warm start.
     ``depth=2`` is the paper prototype under ``default_thetas``; any other
     depth is the ``deep_config`` cascade with 12-wide hidden layers and a
-    10-wide readout layer."""
+    10-wide readout layer. ``packed`` is the launchers' ``--packed`` /
+    ``--no-packed`` knob: uint8 volleys / int8 weights at the fused kernel
+    boundary vs the legacy i32 layout — bit-exact either way and excluded
+    from the checkpoint fingerprint, so warm starts cross the flag freely
+    (DESIGN.md §14)."""
     if depth < 1:
         raise ValueError(f"depth={depth}")
     if depth == 2:
         theta1, theta2 = default_thetas(sites)
-        return network_config(sites=sites, theta1=theta1, theta2=theta2,
-                              impl=impl)
-    widths = (12,) * (depth - 1) + (10,)
-    return deep_config(sites=sites, widths=widths, impl=impl)
+        cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                             impl=impl)
+    else:
+        widths = (12,) * (depth - 1) + (10,)
+        cfg = deep_config(sites=sites, widths=widths, impl=impl)
+    return dataclasses.replace(cfg, packed=packed)
 
 
 def train_config(sites: int = 625, smoke: bool = False, **overrides):

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stdp import STDPConfig, stdp_update
-from repro.core.temporal import WaveSpec
+from repro.core.temporal import SPIKE_DTYPE, WaveSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +89,7 @@ def crossing_time(V: jax.Array, theta, spec: WaveSpec) -> jax.Array:
     crossed = V >= jnp.asarray(theta, dtype=V.dtype)
     any_cross = crossed.any(axis=-2)
     first = jnp.argmax(crossed, axis=-2).astype(jnp.int32)
-    return jnp.where(any_cross, first, spec.T).astype(jnp.int8)
+    return jnp.where(any_cross, first, spec.T).astype(SPIKE_DTYPE)
 
 
 def column_forward(x: jax.Array, w: jax.Array, theta, spec: WaveSpec) -> jax.Array:
@@ -134,7 +134,7 @@ def wta_inhibit(z: jax.Array, spec: WaveSpec) -> jax.Array:
     idx = jnp.arange(q, dtype=jnp.int32)
     won = idx == winner[..., None]
     fired = zi < spec.T
-    return jnp.where(won & fired, zi, spec.T).astype(jnp.int8)
+    return jnp.where(won & fired, zi, spec.T).astype(SPIKE_DTYPE)
 
 
 def column_step(
@@ -146,8 +146,8 @@ def column_step(
 ) -> Tuple[jax.Array, jax.Array]:
     """One full gamma wave: forward -> WTA -> (optionally) STDP.
 
-    x: (B?, p) int8 spike times; w: (p, q) int8.
-    Returns (z_out (B?, q) int8 post-WTA spike times, new weights).
+    x: (B?, p) uint8 spike times; w: (p, q) int8.
+    Returns (z_out (B?, q) uint8 post-WTA spike times, new weights).
     """
     z_pre = column_forward(x, w, cfg.theta, cfg.wave)
     z_out = wta_inhibit(z_pre, cfg.wave)

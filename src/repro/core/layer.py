@@ -30,7 +30,7 @@ from repro.core.column import (
     ColumnConfig, column_forward, column_forward_matmul, init_weights, wta_inhibit,
 )
 from repro.core.stdp import stdp_net_from_uniforms, stdp_update
-from repro.core.temporal import WaveSpec
+from repro.core.temporal import SPIKE_DTYPE, WaveSpec
 from repro.kernels import ops as _kops
 
 
@@ -63,7 +63,7 @@ def layer_forward(x: jax.Array, w: jax.Array, cfg: LayerConfig) -> jax.Array:
     spec = cfg.column.wave
     if cfg.column.impl in ("pallas", "fused"):
         z = _kops.layer_forward_fused(x, w, theta=cfg.column.theta, T=spec.T)
-        return z.astype(jnp.int8)
+        return z.astype(SPIKE_DTYPE)
     fwd = column_forward_matmul if cfg.column.impl == "matmul" else column_forward
 
     def one_col(xc, wc):
@@ -187,10 +187,10 @@ def extract_patches(images: jax.Array, k: int, stride: int = 1) -> jax.Array:
 def encode_patches_onoff(patches01: jax.Array, spec: WaveSpec) -> jax.Array:
     """Pixel intensities in [0,1] -> interleaved on/off spike times.
 
-    (B, sites, px) -> (B, sites, 2*px) int8; this is the DoG-style
+    (B, sites, px) -> (B, sites, 2*px) uint8; this is the DoG-style
     two-polarity front end feeding layer 1 (DESIGN.md §1).
     """
     on = jnp.round((1.0 - jnp.clip(patches01, 0, 1)) * spec.T)
     off = jnp.round(jnp.clip(patches01, 0, 1) * spec.T)
     out = jnp.stack([on, off], axis=-1).reshape(*patches01.shape[:-1], patches01.shape[-1] * 2)
-    return out.astype(jnp.int8)
+    return out.astype(SPIKE_DTYPE)

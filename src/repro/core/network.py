@@ -31,7 +31,7 @@ from repro.core.layer import (
     layer_uniforms,
 )
 from repro.core.stdp import STDPConfig, apply_net
-from repro.core.temporal import WaveSpec
+from repro.core.temporal import SPIKE_DTYPE, WaveSpec
 from repro.kernels import padding as _kpad
 from repro.kernels import tnn_wave as _ktw
 
@@ -42,6 +42,13 @@ class NetworkConfig:
     image_hw: Tuple[int, int] = (28, 28)
     patch_k: int = 4
     n_classes: int = 10
+    # Bit-packed kernel IO for the fused wave executor (DESIGN.md §14):
+    # spike volleys cross the pallas_call boundary as uint8 and weights as
+    # int8, widening to i32 only inside the kernel accumulator. False keeps
+    # the i32-at-the-boundary layout (the known-safe Mosaic tiling) — the
+    # two are bit-exact, so the flag is a pure bytes/performance knob and is
+    # deliberately excluded from the checkpoint config fingerprint.
+    packed: bool = True
 
     def validate(self) -> None:
         for l in self.layers:
@@ -131,7 +138,7 @@ def input_wave_spec(cfg: NetworkConfig) -> WaveSpec:
 
 
 def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
-    """(B, H, W) float in [0,1] -> (B, sites, 32) int8 spike times.
+    """(B, H, W) float in [0,1] -> (B, sites, 32) uint8 spike times.
 
     DoG contrast -> on/off half-wave rectification -> temporal encoding.
     Strong contrast spikes early; zero contrast never spikes. The wave spec
@@ -144,7 +151,7 @@ def encode_images(images01: jax.Array, cfg: NetworkConfig) -> jax.Array:
     t_off = jnp.round((1.0 - off) * wave.T)
     out = jnp.stack([t_on, t_off], axis=-1).reshape(
         on.shape[0], on.shape[1], on.shape[2] * 2)
-    return out.astype(jnp.int8)
+    return out.astype(SPIKE_DTYPE)
 
 
 def _uses_fused_wave(cfg: NetworkConfig) -> bool:
@@ -171,7 +178,7 @@ def network_forward(
     if _uses_fused_wave(cfg):
         plan = _kpad.network_plan(cfg, x.shape[0])
         zs = _ktw.wave_forward(x, tuple(params), plan=plan)
-        return [z.astype(jnp.int8) for z in zs]
+        return [z.astype(SPIKE_DTYPE) for z in zs]
     outs = []
     for w, lcfg in zip(params, cfg.layers):
         x = layer_forward(x, w, lcfg)
@@ -196,7 +203,7 @@ def network_train_wave(
             x, tuple(params), tuple((u[:, 0], u[:, 1]) for u in us),
             plan=plan)
         return (
-            [z.astype(jnp.int8) for z in zs],
+            [z.astype(SPIKE_DTYPE) for z in zs],
             [apply_net(w, net, lcfg.column.wave)
              for w, net, lcfg in zip(params, nets, cfg.layers)],
         )
@@ -406,7 +413,7 @@ def network_train_step(
         if axis_name is not None:
             nets = [jax.lax.psum(net, axis_name) for net in nets]
         return (
-            [z.astype(jnp.int8) for z in zs],
+            [z.astype(SPIKE_DTYPE) for z in zs],
             [apply_net(w, net, lcfg.column.wave)
              for w, net, lcfg in zip(params, nets, cfg.layers)],
         )

@@ -22,6 +22,13 @@ import jax.numpy as jnp
 
 DEFAULT_TIME_BITS = 3
 
+# The canonical storage dtype for spike times. Times live in [0, T] with
+# T <= 128 (time_bits <= 7), so an unsigned byte holds every legal value —
+# including the T = "no spike" pad encoding — at 1/4 the bytes of the i32
+# the kernels accumulate in (DESIGN.md §14). uint8 rather than int8 so the
+# dtype itself cannot misread a time as negative if T ever grows past 127.
+SPIKE_DTYPE = jnp.uint8
+
 
 @dataclasses.dataclass(frozen=True)
 class WaveSpec:
@@ -61,7 +68,7 @@ def encode_intensity(values: jax.Array, spec: WaveSpec) -> jax.Array:
     """
     v = jnp.clip(values, 0.0, 1.0)
     t = jnp.round((1.0 - v) * spec.T)
-    return t.astype(jnp.int8)
+    return t.astype(SPIKE_DTYPE)
 
 
 def decode_time(times: jax.Array, spec: WaveSpec) -> jax.Array:

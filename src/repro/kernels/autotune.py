@@ -1,0 +1,240 @@
+"""Block-size autotuner for the fused wave executor's launch geometry.
+
+The megakernel's ``PadPlan`` has two free extents (DESIGN.md §14): the
+batch tile ``block_b`` (the minor, sequential grid dimension — smaller
+tiles mean more grid steps but smaller VMEM residency per step) and the
+layer-1 pad alignment ``p_align`` (pp = pad_to(p1, align): rounder tiles
+vs more no-op pad rows). Neither has a universally best value — it depends
+on the geometry (sites, fan-in, depth, batch) and the machine — so instead
+of guessing, this module measures: for one geometry it times the jitted
+fused forward wave (``_timeit_min`` best-of-n, the same estimator the
+benchmark harness uses) under a small candidate grid and records the
+winner in a JSON cache keyed by :func:`repro.kernels.padding.plan_geometry_key`.
+
+The cache is CHECKED IN (``benchmarks/tuned_blocks.json``) so runs are
+reproducible: ``network_plan`` consults it with ``lookup`` on every
+plan build and falls back to the static defaults (block_b=64, 8-aligned
+p1) for geometries with no entry — an exact-geometry match or nothing,
+never a "nearest" guess. Tuned extents only change pad rows (all no-op
+encoded), so a tuned plan is bit-exact with the static plan by
+construction; tests assert it anyway.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.kernels.autotune          # tune defaults
+    PYTHONPATH=src python -m repro.kernels.autotune --check  # staleness check
+
+``--check`` warns (exit 1) when the cache lacks entries for the default
+benchmark geometries — the CI bench job runs it so a geometry change that
+silently invalidates the cache shows up in the logs instead of as a
+mystery regression.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import pathlib
+import time
+from typing import Dict, Optional, Tuple
+
+# Candidate extents. block_b candidates are clamped by PadPlan.make to the
+# 8-aligned batch extent, so listing more than the batch supports is
+# harmless; p_align candidates must divide MAX_FUSED_P1 so the padded p1
+# can never exceed the single-tile cap.
+BLOCK_B_CANDIDATES = (8, 16, 32, 64, 128)
+P_ALIGN_CANDIDATES = (8, 16, 32)
+
+_ENV_CACHE = "TNN_TUNED_BLOCKS"
+
+
+def cache_path() -> pathlib.Path:
+    """The tuned-block cache file: ``$TNN_TUNED_BLOCKS`` when set, else the
+    checked-in ``benchmarks/tuned_blocks.json`` at the repo root."""
+    env = os.environ.get(_ENV_CACHE)
+    if env:
+        return pathlib.Path(env)
+    return (pathlib.Path(__file__).resolve().parents[3]
+            / "benchmarks" / "tuned_blocks.json")
+
+
+@functools.lru_cache(maxsize=4)
+def _load(path_str: str, mtime: float) -> Dict[str, Dict]:
+    del mtime  # cache key only: reload when the file changes
+    try:
+        with open(path_str) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return data.get("geometries", {})
+
+
+def load_cache() -> Dict[str, Dict]:
+    """Geometry-key -> entry dict mapping ({} when the cache is absent)."""
+    path = cache_path()
+    try:
+        mtime = path.stat().st_mtime
+    except OSError:
+        return {}
+    return _load(str(path), mtime)
+
+
+def lookup(key: str) -> Optional[Tuple[int, int]]:
+    """Exact-geometry cache lookup: ``(block_b, p_align)`` or ``None``
+    (the static-plan fallback). Entries with out-of-range extents are
+    ignored rather than trusted — a hand-edited cache cannot push the plan
+    outside the kernel's single-tile contract."""
+    e = load_cache().get(key)
+    if not isinstance(e, dict):
+        return None
+    bb, pa = e.get("block_b"), e.get("p_align")
+    if bb not in BLOCK_B_CANDIDATES or pa not in P_ALIGN_CANDIDATES:
+        return None
+    return int(bb), int(pa)
+
+
+def _timeit_min(fn, n: int = 5) -> float:
+    """Best-of-n wall time (us) — minimum over runs, the estimator least
+    perturbed by scheduler noise (same rationale as benchmarks/run.py)."""
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def tune_geometry(cfg, batch: int, n: int = 5, verbose: bool = False) -> Dict:
+    """Measure the candidate grid for one fused-capable config and return
+    the winning entry (not yet written to the cache). The measured program
+    is the jitted fused forward wave — the volley path whose launch
+    geometry the plan controls."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.network import init_network, with_impl
+    from repro.kernels import padding as _kpad
+    from repro.kernels import tnn_wave as _ktw
+
+    cfg = with_impl(cfg, "fused")
+    params = tuple(init_network(jax.random.PRNGKey(0), cfg))
+    first = cfg.layers[0]
+    T = first.column.wave.T
+    x = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, first.n_cols, first.column.p),
+        0, T + 1, dtype=jnp.uint8)
+
+    results = []
+    for bb in BLOCK_B_CANDIDATES:
+        if bb > _kpad.pad_to(batch, 8) and results:
+            break  # clamped to the same plan as the previous candidate
+        for pa in P_ALIGN_CANDIDATES:
+            pad = _kpad.PadPlan.make(
+                batch, first.column.p, block_b=bb,
+                block_p=_kpad.MAX_FUSED_P1, p_align=pa)
+            base = _kpad.network_plan(cfg, batch, block_b=64)
+            plan = _kpad.NetworkPlan(
+                n_cols=base.n_cols, ps=base.ps, qs=base.qs,
+                thetas=base.thetas, T=base.T, w_max=base.w_max, pad=pad,
+                tables=base.tables, mus=base.mus, packed=base.packed)
+            us = _timeit_min(
+                lambda p=plan: jax.block_until_ready(
+                    _ktw.wave_forward(x, params, plan=p)[-1]), n=n)
+            results.append((us, bb, pa))
+            if verbose:
+                print(f"    block_b={bb:<4d} p_align={pa:<3d} "
+                      f"{us/1e3:9.2f} ms/wave")
+    us, bb, pa = min(results)
+    return {"block_b": bb, "p_align": pa, "us_per_wave": round(us, 1),
+            "candidates": len(results)}
+
+
+def default_geometries():
+    """The geometries the committed cache is expected to cover: the smoke
+    and full benchmark shapes of the 2-layer prototype plus the 3-layer
+    deep cascade (the shapes ``benchmarks/run.py`` times)."""
+    from repro.configs.tnn_mnist import (
+        deep_config, default_thetas, network_config,
+    )
+
+    out = []
+    for sites, batch in ((16, 8), (625, 16)):
+        t1, t2 = default_thetas(sites)
+        out.append((network_config(sites=sites, theta1=t1, theta2=t2,
+                                   impl="fused"), batch))
+        out.append((deep_config(sites=sites, impl="fused"), batch))
+    return out
+
+
+def check_cache(verbose: bool = True) -> int:
+    """Staleness check: every default geometry must have a cache entry.
+    Returns the number of MISSING geometries (0 = fresh)."""
+    from repro.kernels.padding import plan_geometry_key
+
+    cache = load_cache()
+    missing = 0
+    for cfg, batch in default_geometries():
+        key = plan_geometry_key(cfg, batch)
+        if key in cache:
+            if verbose:
+                e = cache[key]
+                print(f"  ok      {key}: block_b={e.get('block_b')} "
+                      f"p_align={e.get('p_align')}")
+        else:
+            missing += 1
+            if verbose:
+                print(f"  MISSING {key}: static-plan fallback in effect "
+                      f"(re-run the tuner to refresh)")
+    return missing
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="staleness check only: exit 1 when the cache "
+                         "lacks entries for the default geometries")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tune only the smoke (sites=16) geometries")
+    ap.add_argument("-n", type=int, default=5,
+                    help="timing repetitions per candidate (best-of-n)")
+    args = ap.parse_args()
+
+    path = cache_path()
+    if args.check:
+        print(f"tuned-block cache: {path} "
+              f"({'present' if path.exists() else 'ABSENT'})")
+        missing = check_cache()
+        if missing:
+            print(f"autotune --check: {missing} default geometry(ies) "
+                  f"missing — plans fall back to the static defaults")
+            return 1
+        print("autotune --check: OK — every default geometry has a tuned "
+              "entry")
+        return 0
+
+    from repro.kernels.padding import plan_geometry_key
+
+    cache = dict(load_cache())
+    geoms = default_geometries()
+    if args.smoke:
+        geoms = [(c, b) for c, b in geoms if c.layers[0].n_cols <= 64]
+    for cfg, batch in geoms:
+        key = plan_geometry_key(cfg, batch)
+        print(f"tuning {key} ...")
+        entry = tune_geometry(cfg, batch, n=args.n, verbose=True)
+        print(f"  -> block_b={entry['block_b']} p_align={entry['p_align']} "
+              f"({entry['us_per_wave']/1e3:.2f} ms/wave)")
+        cache[key] = entry
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"geometries": cache}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cache)} geometry entries to {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -71,20 +71,24 @@ class PadPlan:
         *,
         block_b: int = 64,
         block_p: int = 256,
+        p_align: int = 8,
         interpret: Optional[bool] = None,
     ) -> "PadPlan":
-        """Clamp block sizes to the 8-aligned problem extents, compute the
+        """Clamp block sizes to the aligned problem extents, compute the
         padded extents, and resolve the interpret auto-fallback: ``None``
         resolves to ``jax.default_backend() != "tpu"`` — Mosaic on a real
         TPU, the (slow but bit-exact) interpreter everywhere else
-        (DESIGN.md §6, §8)."""
+        (DESIGN.md §6, §8). ``p_align`` widens the synapse-axis alignment
+        above the tiling-minimum 8 — the autotuner's p1-pad knob
+        (DESIGN.md §14): a larger alignment trades pad rows (all no-op
+        encoded) for rounder VMEM tiles."""
         if interpret is None:
             interpret = not _on_tpu()
         block_b = min(block_b, pad_to(b, 8))
         if p is None:
             p = block_p = pp = 0
         else:
-            block_p = min(block_p, pad_to(p, 8))
+            block_p = min(block_p, pad_to(p, max(p_align, 8)))
             pp = pad_to(p, block_p)
         return cls(b=b, p=p, block_b=block_b, block_p=block_p,
                    bp=pad_to(b, block_b), pp=pp, interpret=interpret)
@@ -166,6 +170,10 @@ class NetworkPlan:
     # search) rates — the Bernoulli side of the counter epilogue.
     tables: Tuple[Tuple[float, ...], ...]
     mus: Tuple[Tuple[float, float, float], ...]
+    # Bit-packed kernel IO (DESIGN.md §14): spike volleys cross the launch
+    # boundary as uint8 and weights as int8, widening to i32 only inside
+    # the kernel; False keeps the legacy widen-before-launch i32 layout.
+    packed: bool = False
 
     @property
     def n_layers(self) -> int:
@@ -205,14 +213,35 @@ def fused_wave_capable(cfg) -> bool:
     return True
 
 
+def plan_geometry_key(cfg, batch: int) -> str:
+    """Stable string naming a fused-wave launch geometry — the lookup key
+    of the autotuner's block cache (``benchmarks/tuned_blocks.json``,
+    DESIGN.md §14). Deliberately covers ONLY what changes the launch shape
+    (sites, per-layer extents, T, batch, packed IO), not thetas/STDP rates:
+    the same silicon geometry at different hyperparameters reuses one tuned
+    entry."""
+    first = cfg.layers[0]
+    ps = "x".join(str(l.column.p) for l in cfg.layers)
+    qs = "x".join(str(l.column.q) for l in cfg.layers)
+    packed = int(bool(getattr(cfg, "packed", False)))
+    return (f"C{first.n_cols}_p{ps}_q{qs}_T{first.column.wave.T}"
+            f"_B{batch}_packed{packed}")
+
+
 @functools.lru_cache(maxsize=64)
-def network_plan(cfg, batch: int, block_b: int = 64,
+def network_plan(cfg, batch: int, block_b: Optional[int] = None,
                  interpret: Optional[bool] = None) -> NetworkPlan:
     """Compute (once per (config, batch)) the fused wave's launch plan.
 
     ``cfg`` is a frozen ``NetworkConfig`` — hashable, so the cache key is
     the config itself; the plan replaces the per-stage padding recomputation
-    the per-layer path does on every kernel wrapper call."""
+    the per-layer path does on every kernel wrapper call.
+
+    ``block_b=None`` (the default) consults the autotuner's checked-in
+    block cache for this exact geometry (``repro.kernels.autotune``,
+    DESIGN.md §14) and falls back to the static defaults (block_b=64,
+    8-aligned p1) when the geometry has no tuned entry; an explicit
+    ``block_b`` bypasses the cache."""
     if not fused_wave_capable(cfg):
         l_desc = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
         raise ValueError(
@@ -222,8 +251,25 @@ def network_plan(cfg, batch: int, block_b: int = 64,
             f"p1 <= {MAX_FUSED_P1}")
     first = cfg.layers[0]
     spec = first.column.wave
+    if spec.T >= 255:
+        raise ValueError(
+            f"wave spec T={spec.T} overflows the packed uint8 spike-time "
+            f"encoding: times live in [0, T] with T as the 'no spike' pad "
+            f"code, so the data plane requires T <= 254 (DESIGN.md §14) — "
+            f"use time_bits <= 7")
+    packed = bool(getattr(cfg, "packed", False))
+    p_align = 8
+    if block_b is None:
+        from repro.kernels import autotune as _autotune
+
+        tuned = _autotune.lookup(plan_geometry_key(cfg, batch))
+        if tuned is not None:
+            block_b, p_align = tuned
+        else:
+            block_b = 64
     pad = PadPlan.make(batch, first.column.p, block_b=block_b,
-                       block_p=MAX_FUSED_P1, interpret=interpret)
+                       block_p=MAX_FUSED_P1, p_align=p_align,
+                       interpret=interpret)
     return NetworkPlan(
         n_cols=first.n_cols,
         ps=tuple(l.column.p for l in cfg.layers),
@@ -234,4 +280,5 @@ def network_plan(cfg, batch: int, block_b: int = 64,
         tables=tuple(l.column.stdp.table_tuple(spec) for l in cfg.layers),
         mus=tuple((l.column.stdp.mu_capture, l.column.stdp.mu_backoff,
                    l.column.stdp.mu_search) for l in cfg.layers),
+        packed=packed,
     )

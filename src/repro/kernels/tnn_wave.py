@@ -94,12 +94,15 @@ def _wave_kernel(
         z_refs = rest
 
     # the whole wave, volleys in registers/VMEM: no HBM round-trip between
-    # layers, no re-padding between stages.
+    # layers, no re-padding between stages. Widening to the i32 accumulator
+    # happens HERE, inside the kernel — under a packed plan the refs hold
+    # uint8 volleys / int8 weights and these casts are the only widening
+    # the wave ever does (DESIGN.md §14).
     v = x_ref[0].astype(jnp.int32)        # (Bt, p1p)
     for i in range(n):
         w = w_refs[i][0].astype(jnp.int32)  # (p_i, q_i)
         z = _rnl_wta(v, w, T=T, theta=thetas[i])  # (Bt, q_i)
-        z_refs[i][0] = z
+        z_refs[i][0] = z.astype(z_refs[i].dtype)
         if learn:
             net_accs[i][...] += stdp_net_tile(
                 w, v, z, u_refs[2 * i][0], u_refs[2 * i + 1][0],
@@ -125,7 +128,8 @@ def _wave_pallas_call(plan: NetworkPlan, learn: bool):
         in_specs.append(pl.BlockSpec((1, pp, q), lambda c, b: (c, 0, 0)))
     out_specs = [pl.BlockSpec((1, bt, q), lambda c, b: (c, b, 0))
                  for q in qs]  # per-layer z
-    out_shape = [jax.ShapeDtypeStruct((C, bp, q), jnp.int32) for q in qs]
+    z_dtype = jnp.uint8 if plan.packed else jnp.int32
+    out_shape = [jax.ShapeDtypeStruct((C, bp, q), z_dtype) for q in qs]
     scratch = []
     if learn:
         for pp, q in zip(pps, qs):  # per-layer up/dn uniforms
@@ -154,16 +158,23 @@ def _wave_pallas_call(plan: NetworkPlan, learn: bool):
 
 
 def _prep_inputs(x, params, plan: NetworkPlan):
-    """Apply the plan's no-op pad encodings once and go column-major.
-    Inputs are widened to i32 before the launch — the same contract the
-    raw per-layer kernels use (int8 VMEM tiles are Mosaic-fragile). Only
+    """Apply the plan's no-op pad encodings once and go column-major. Only
     the input-facing synapse axis needs padding; deeper weights already
-    match the in-VMEM volley extents."""
+    match the in-VMEM volley extents.
+
+    Dtype contract (DESIGN.md §14): under a packed plan the volley crosses
+    the launch boundary as uint8 and the weights as int8 — 1/4 the
+    HBM/VMEM bytes — and the kernel body widens to its i32 accumulator
+    internally. An unpacked plan widens everything to i32 here, before the
+    launch (int8 VMEM tiles are Mosaic-fragile on some TPU generations, so
+    the wide layout stays selectable per config)."""
     pad = plan.pad
+    x_dt = jnp.uint8 if plan.packed else jnp.int32
+    w_dt = jnp.int8 if plan.packed else jnp.int32
     x = pad.pad_spikes(x, plan.T, b_axis=0, p_axis=2)       # (Bp, C, p1p)
-    xT = x.transpose(1, 0, 2).astype(jnp.int32)             # (C, Bp, p1p)
-    ws = [pad.pad_weights(params[0], p_axis=1).astype(jnp.int32)]
-    ws += [w.astype(jnp.int32) for w in params[1:]]
+    xT = x.transpose(1, 0, 2).astype(x_dt)                  # (C, Bp, p1p)
+    ws = [pad.pad_weights(params[0], p_axis=1).astype(w_dt)]
+    ws += [w.astype(w_dt) for w in params[1:]]
     return [xT] + ws
 
 
@@ -173,8 +184,9 @@ def wave_forward(
 ) -> Tuple[jax.Array, ...]:
     """One fused forward gamma wave through the whole cascade. x (B, C, p1)
     ints; params = per-layer weights (w_i (C, p_i, q_i)). Returns the
-    per-layer post-WTA spike times (z_i (B, C, q_i)) i32 — bit-exact with
-    the per-layer backends at any depth."""
+    per-layer post-WTA spike times (z_i (B, C, q_i)) — uint8 under a
+    packed plan, i32 otherwise; identical bits either way, and bit-exact
+    with the per-layer backends at any depth."""
     zs = _wave_pallas_call(plan, learn=False)(*_prep_inputs(x, params, plan))
     B = plan.pad.b
     return tuple(z.transpose(1, 0, 2)[:B] for z in zs)

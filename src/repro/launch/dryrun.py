@@ -350,7 +350,7 @@ def run_tnn_cell(cell_name: str, multi_pod: bool, verbose: bool = True,
                               "impl": impl, "gauss": gauss}
     t0 = time.time()
     try:
-        x_abs = jax.ShapeDtypeStruct((B, sites, 32), jnp.int8)
+        x_abs = jax.ShapeDtypeStruct((B, sites, 32), jnp.uint8)
         w_abs = [jax.ShapeDtypeStruct((sites, 32, 12), jnp.int8),
                  jax.ShapeDtypeStruct((sites, 12, 10), jnp.int8)]
         key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)

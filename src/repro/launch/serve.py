@@ -83,7 +83,7 @@ def serve_tnn(args: argparse.Namespace) -> None:
     mesh = make_host_mesh()
     n_slots = resolve_slots(args.slots, int(mesh.shape.get("data", 1)))
     cfg = launcher_network_config(args.sites, depth=args.depth,
-                                  impl=args.impl)
+                                  impl=args.impl, packed=args.packed)
     print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
           f"on {describe(mesh)}")
     if args.from_ckpt:
@@ -151,6 +151,13 @@ def main() -> None:
                          "K > 1 drains up to K x slots requests per jitted "
                          "dispatch, latency stays per-request "
                          "(DESIGN.md §13)")
+    ap.add_argument("--packed", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="bit-packed fused-kernel IO: uint8 spike volleys "
+                         "/ int8 weights at the pallas_call boundary; "
+                         "--no-packed keeps the legacy i32 layout — "
+                         "bit-exact either way, and checkpoints cross the "
+                         "flag freely (DESIGN.md §14)")
     ap.add_argument("--lockstep", action="store_true",
                     help="serve with the blocking one-wave-at-a-time loop "
                          "instead of the continuous-batching pipeline "

@@ -41,7 +41,8 @@ def train_tnn(args: argparse.Namespace) -> None:
     from repro.train.tnn_trainer import TNNTrainer
 
     sites = 16 if args.smoke and args.sites == 625 else args.sites
-    cfg = launcher_network_config(sites, depth=args.depth, impl=args.impl)
+    cfg = launcher_network_config(sites, depth=args.depth, impl=args.impl,
+                                  packed=args.packed)
     mesh = make_host_mesh()
     ckpt_dir = args.ckpt_dir or "/tmp/repro_tnn_ckpt"
     tcfg = train_config(
@@ -93,6 +94,13 @@ def main() -> None:
                          "waves on device in one launch geometry, clamped "
                          "at eval/checkpoint boundaries — bit-exact with "
                          "K=1 for any K (DESIGN.md §13)")
+    ap.add_argument("--packed", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="bit-packed fused-kernel IO: uint8 spike volleys "
+                         "/ int8 weights at the pallas_call boundary, "
+                         "widening to i32 only inside the kernel; "
+                         "--no-packed keeps the legacy i32 layout — "
+                         "bit-exact either way (DESIGN.md §14)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="waves between vote-table evals (0 = epoch ends)")
     ap.add_argument("--ckpt-every", type=int, default=0,

@@ -2,14 +2,23 @@
 dry-run JSON artifacts.
 
     PYTHONPATH=src python -m repro.roofline.report experiments/dryrun > tables.md
+
+``--profile`` rescores every stored cell against a different
+:class:`repro.roofline.analysis.MachineProfile` (default ``tpu-v5e``):
+the artifacts carry the raw per-chip HLO FLOPs / bytes / collective
+bytes, so the three roofline terms are just re-divided by the selected
+machine's peaks — ``--profile cpu-host`` stops CPU-interpret compiles
+from being graded against 197 TFLOP/s (DESIGN.md §14).
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
-import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.roofline.analysis import PROFILES, MachineProfile
 
 
 def load_all(d: str) -> List[Dict]:
@@ -71,10 +80,38 @@ def dryrun_section(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
-def roofline_section(rows: List[Dict]) -> str:
+def _rescore(rf: Dict, profile: Optional[MachineProfile]) -> Dict:
+    """Re-divide one stored roofline cell by a different machine's peaks.
+
+    The artifacts carry the raw per-chip HLO FLOPs / HBM bytes /
+    modelled collective bytes, so rescoring is pure arithmetic — no
+    recompile. ``None`` returns the stored (record-time) terms."""
+    if profile is None:
+        return rf
+    t_comp = rf["hlo_flops_per_chip"] / profile.peak_flops
+    t_mem = rf["hbm_bytes_per_chip"] / profile.hbm_bw
+    t_coll = rf["collective_bytes_per_chip"] / profile.ici_bw
+    t_bound = max(t_comp, t_mem, t_coll)
+    bottleneck = {t_comp: "compute", t_mem: "memory",
+                  t_coll: "collective"}[t_bound]
+    out = dict(rf)
+    out.update(
+        profile=profile.name,
+        t_compute_s=t_comp, t_memory_s=t_mem, t_collective_s=t_coll,
+        bottleneck=bottleneck,
+        roofline_fraction=((rf["model_flops_per_chip"] / profile.peak_flops)
+                           / t_bound if t_bound else 0.0))
+    return out
+
+
+def roofline_section(rows: List[Dict],
+                     profile: Optional[MachineProfile] = None) -> str:
+    peaks = profile or PROFILES["tpu-v5e"]
     out = ["## §Roofline\n",
-           "Terms in seconds/step/chip: compute = HLO_FLOPs/197TF; memory = "
-           "HLO bytes/819GB/s; collective = modelled ring wire-bytes/50GB/s "
+           f"Terms in seconds/step/chip against the `{peaks.name}` profile: "
+           f"compute = HLO_FLOPs/{peaks.peak_flops:.3g}; memory = "
+           f"HLO bytes/{peaks.hbm_bw:.3g}B/s; collective = modelled ring "
+           "wire-bytes over the link bandwidth "
            "(per-layer costs measured on unrolled 1-vs-2-layer compiles and "
            "extrapolated — XLA counts loop bodies once; see DESIGN.md). "
            "`useful` = MODEL_FLOPS/HLO_FLOPs (remat/redundancy waste); "
@@ -85,7 +122,7 @@ def roofline_section(rows: List[Dict]) -> str:
     for r in rows:
         if r["status"] != "ok" or "roofline" not in r:
             continue
-        rf = r["roofline"]
+        rf = _rescore(r["roofline"], profile)
         out.append(
             f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
             f"{rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} | "
@@ -96,11 +133,18 @@ def roofline_section(rows: List[Dict]) -> str:
 
 
 def main() -> None:
-    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
-    rows = load_all(d)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dryrun_dir", nargs="?", default="experiments/dryrun")
+    ap.add_argument("--profile", default=None, choices=sorted(PROFILES),
+                    help="rescore the stored cells against this machine "
+                         "profile's peaks (default: the record-time terms, "
+                         "i.e. tpu-v5e)")
+    args = ap.parse_args()
+    rows = load_all(args.dryrun_dir)
+    profile = PROFILES[args.profile] if args.profile else None
     print(dryrun_section(rows))
     print()
-    print(roofline_section(rows))
+    print(roofline_section(rows, profile))
 
 
 if __name__ == "__main__":

@@ -211,6 +211,67 @@ def assert_cross_impl_parity(spec, train: bool = True):
                 x, k) == 1
 
 
+def assert_packed_parity(spec):
+    """The packed data-plane property (DESIGN.md §14): for one sampled
+    topology, the fused executor under the packed plan (uint8 volleys /
+    int8 weights at the ``pallas_call`` boundary) is bit-exact with
+    ``packed=False`` (the legacy i32 boundary) AND with the direct
+    reference — forward spike times per layer (all carried as
+    ``SPIKE_DTYPE`` = uint8), post-STDP weights (the counters' saturating
+    apply, so counter parity is implied), and vote-table classify results
+    per uid — across depth 1..4, non-8-aligned shapes, and the per-layer
+    fallback path when the draw is not fused-capable."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        build_vote_table, classify, init_network, network_forward,
+        network_train_wave, with_impl,
+    )
+    from repro.core.temporal import SPIKE_DTYPE
+
+    ref = build_network(spec)
+    params = init_network(jax.random.PRNGKey(spec["seed"]), ref)
+    T = ref.layers[0].column.wave.T
+    x = jax.random.randint(
+        jax.random.PRNGKey(spec["seed"] ^ 0x5EED),
+        (spec["B"], spec["C"], spec["p1"]), 0, T + 1, SPIKE_DTYPE)
+    k = jax.random.PRNGKey(spec["seed"] ^ 0x7A7E)
+    zs_ref = network_forward(x, params, ref)
+    outs_ref, params_ref = network_train_wave(x, params, ref, k)
+    n_classes = 3
+    labels = jax.random.randint(
+        jax.random.PRNGKey(spec["seed"] ^ 0xC1A5), (spec["B"],),
+        0, n_classes)
+    vt = build_vote_table(zs_ref[-1], labels, n_classes, T)
+    preds_ref = np.asarray(classify(zs_ref[-1], vt, T, soft=True))
+
+    fused = with_impl(ref, "fused")
+    for packed in (True, False):
+        cfg = dataclasses.replace(fused, packed=packed)
+        zs = network_forward(x, params, cfg)
+        for layer, (a, b) in enumerate(zip(zs_ref, zs)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"packed={packed} forward layer {layer}")
+            assert b.dtype == jnp.dtype(SPIKE_DTYPE), (packed, layer, b.dtype)
+        outs, params_p = network_train_wave(x, params, cfg, k)
+        for layer, (a, b) in enumerate(zip(outs_ref, outs)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"packed={packed} train z layer {layer}")
+        for layer, (a, b) in enumerate(zip(params_ref, params_p)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"packed={packed} weights layer {layer}")
+            assert b.dtype == jnp.int8, (packed, layer, b.dtype)
+        np.testing.assert_array_equal(
+            np.asarray(classify(zs[-1], vt, T, soft=True)), preds_ref,
+            err_msg=f"packed={packed} classify")
+
+
 def assert_scan_parity(spec, ks=(1, 2, 5)):
     """The K-wave scan property (DESIGN.md §13): for one sampled topology,
     training K gamma waves through the on-device scan loop

@@ -20,7 +20,7 @@ SPEC = WaveSpec()
 def test_encode_decode_roundtrip():
     v = jnp.linspace(0, 1, 9)
     t = encode_intensity(v, SPEC)
-    assert t.dtype == jnp.int8
+    assert t.dtype == jnp.uint8
     assert int(t[-1]) == 0 and int(t[0]) == SPEC.T  # strong->early, zero->none
     v2 = decode_time(t, SPEC)
     np.testing.assert_allclose(np.asarray(v2), np.asarray(v), atol=1 / SPEC.T)

@@ -89,7 +89,7 @@ def test_train_parity(B, C, p1, q1, q2, T, th1, th2):
     for a, b, c in zip(params_r, params_f, params_s):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
-        assert b.dtype == a.dtype == jnp.int8
+        assert b.dtype == a.dtype == jnp.int8  # weights stay int8
 
 
 def test_train_step_jit_parity():

@@ -1,0 +1,219 @@
+"""Tier-1 tests for the packed data plane + block autotuner (DESIGN.md
+§14): the uint8 spike-time contract end-to-end, packed-vs-i32 kernel-IO
+bit-exactness (deterministic fixed-topology case — the randomized axis
+lives in test_topology_properties.py), the T >= 255 overflow guard at
+plan build, the tuned-block cache (env override, exact-key lookup,
+out-of-range rejection, staleness counting), and 4-way shard_map packed
+parity in a subprocess (forced host device count, like
+test_tnn_serving's meshed test).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import assert_packed_parity
+from repro.configs.tnn_mnist import deep_config, network_config
+from repro.core import (
+    ColumnConfig,
+    LayerConfig,
+    NetworkConfig,
+    WaveSpec,
+    encode_images,
+    init_network,
+    network_forward,
+)
+from repro.core.temporal import SPIKE_DTYPE
+from repro.kernels import autotune
+from repro.kernels.padding import network_plan, plan_geometry_key
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -- the uint8 spike-time contract ------------------------------------------
+
+
+def test_spike_dtype_is_uint8_end_to_end():
+    """Encodings, inter-layer volleys and the readout all carry
+    SPIKE_DTYPE = uint8; weights stay int8."""
+    assert jnp.dtype(SPIKE_DTYPE) == jnp.uint8
+    cfg = deep_config(sites=4, widths=(12, 9, 5), thetas=(6, 3, 2),
+                      impl="fused")
+    imgs = jnp.linspace(0, 1, 2 * cfg.image_hw[0] * cfg.image_hw[1]).reshape(
+        2, *cfg.image_hw).astype(jnp.float32)
+    x = encode_images(imgs, cfg)
+    assert x.dtype == jnp.uint8
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    assert all(w.dtype == jnp.int8 for w in params)
+    for z in network_forward(x, params, cfg):
+        assert z.dtype == jnp.uint8
+    T = cfg.layers[0].column.wave.T
+    assert int(x.max()) <= T  # T = "never spikes" is the largest code
+
+
+def test_packed_parity_fixed_topology():
+    """Deterministic instance of the packed-vs-i32 property (the
+    randomized sweep is test_topology_properties.py): depth 3, odd
+    extents, non-8-aligned fan-in."""
+    assert_packed_parity({
+        "C": 3, "p1": 11, "qs": (7, 9, 4), "thetas": (9, 5, 3),
+        "T": 16, "B": 5, "seed": 1234, "break_wave_at": None,
+    })
+
+
+def test_overflow_guard_rejects_T_255_at_plan_build():
+    """T >= 255 cannot share a byte with the T-as-never-spikes pad code;
+    network_plan must refuse at plan build with a clear error. The config
+    is constructed directly (ColumnConfig.validate would reject
+    time_bits=8 first — the guard must hold even for configs that skipped
+    validate)."""
+    col = ColumnConfig(p=8, q=4, theta=5, wave=WaveSpec(time_bits=8),
+                       impl="fused")
+    cfg = NetworkConfig(layers=(LayerConfig(2, col),))
+    assert col.wave.T == 256
+    with pytest.raises(ValueError, match="overflows the packed uint8"):
+        network_plan(cfg, 4)
+
+
+# -- the tuned-block cache ---------------------------------------------------
+
+
+def _write_cache(path, geometries):
+    with open(path, "w") as f:
+        json.dump({"geometries": geometries}, f)
+    autotune._load.cache_clear()  # don't trust mtime resolution in tests
+
+
+def test_tuned_cache_lookup_and_fallback(tmp_path, monkeypatch):
+    """network_plan honors an exact-geometry cache entry via
+    $TNN_TUNED_BLOCKS and falls back to the static plan for unknown
+    keys; tuned and static plans are bit-exact."""
+    cfg = network_config(sites=4, theta1=6, theta2=2, impl="fused")
+    B = 20  # 8-aligned extent 24: tuned block_b=16 and static 64 diverge
+    key = plan_geometry_key(cfg, B)
+    cache = tmp_path / "tuned.json"
+    _write_cache(cache, {key: {"block_b": 16, "p_align": 16}})
+    monkeypatch.setenv("TNN_TUNED_BLOCKS", str(cache))
+    network_plan.cache_clear()
+    tuned = network_plan(cfg, B)
+    assert tuned.pad.block_b == 16 and tuned.pad.bp == 32
+    assert tuned.pad.pp % 16 == 0
+    assert autotune.lookup(key) == (16, 16)
+    assert autotune.lookup("C999_nonexistent") is None
+
+    # unknown geometry -> static defaults (block_b=64 clamps to 24)
+    monkeypatch.setenv("TNN_TUNED_BLOCKS", str(tmp_path / "absent.json"))
+    network_plan.cache_clear()
+    static = network_plan(cfg, B)
+    assert static.pad.block_b == 24 and static.pad.bp == 24
+
+    # tuned and static plans are bit-exact (pad rows are all no-op)
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    T = cfg.layers[0].column.wave.T
+    x = jax.random.randint(jax.random.PRNGKey(1),
+                           (B, 4, cfg.layers[0].column.p), 0, T + 1,
+                           SPIKE_DTYPE)
+    from repro.kernels.tnn_wave import wave_forward
+    za = wave_forward(x, tuple(params), plan=tuned)
+    zb = wave_forward(x, tuple(params), plan=static)
+    for a, b in zip(za, zb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    network_plan.cache_clear()
+
+
+def test_tuned_cache_rejects_out_of_range_entries(tmp_path, monkeypatch):
+    """A hand-edited cache cannot push the plan outside the kernel's
+    single-tile contract: entries off the candidate lists are ignored."""
+    cfg = network_config(sites=4, theta1=6, theta2=2, impl="fused")
+    key = plan_geometry_key(cfg, 4)
+    cache = tmp_path / "tuned.json"
+    _write_cache(cache, {key: {"block_b": 7, "p_align": 1024}})
+    monkeypatch.setenv("TNN_TUNED_BLOCKS", str(cache))
+    assert autotune.lookup(key) is None
+    _write_cache(cache, {key: "not-a-dict"})
+    assert autotune.lookup(key) is None
+
+
+def test_tuned_cache_staleness_check(tmp_path, monkeypatch):
+    """check_cache counts default geometries with no entry (the CI
+    warn-only gate); the committed cache has zero missing."""
+    monkeypatch.setenv("TNN_TUNED_BLOCKS", str(tmp_path / "empty.json"))
+    n_default = len(autotune.default_geometries())
+    assert n_default >= 4
+    assert autotune.check_cache(verbose=False) == n_default
+    monkeypatch.setenv(
+        "TNN_TUNED_BLOCKS",
+        os.path.join(ROOT, "benchmarks", "tuned_blocks.json"))
+    assert autotune.check_cache(verbose=False) == 0
+
+
+def test_packed_excluded_from_checkpoint_fingerprint():
+    """packed changes bytes moved, never results — warm starts must cross
+    the flag freely."""
+    from repro.checkpoint import tnn_config_fingerprint
+
+    cfg = network_config(sites=4, theta1=6, theta2=2, impl="fused")
+    flipped = dataclasses.replace(cfg, packed=not cfg.packed)
+    assert tnn_config_fingerprint(cfg) == tnn_config_fingerprint(flipped)
+
+
+# -- 4-way shard_map packed parity (subprocess: forced host devices) --------
+
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.tnn_mnist import launcher_network_config
+    from repro.core import init_train_state, make_train_step
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    assert mesh.shape["data"] == 4, mesh.shape
+    SITES, B = 4, 8
+    base = launcher_network_config(SITES, depth=2, impl="fused",
+                                   packed=True)
+    T = base.layers[0].column.wave.T
+    x = jax.random.randint(jax.random.PRNGKey(1),
+                           (B, SITES, base.layers[0].column.p),
+                           0, T + 1, dtype=jnp.uint8)
+    results = {}
+    for packed in (True, False):
+        cfg = dataclasses.replace(base, packed=packed)
+        for m in (None, mesh):
+            step = make_train_step(cfg, mesh=m, donate=False)
+            state = init_train_state(jax.random.PRNGKey(0), cfg)
+            new_state, z = step(state, x)
+            results[(packed, m is not None)] = (
+                jax.tree_util.tree_map(np.asarray, new_state["params"]),
+                np.asarray(z))
+    ref_params, ref_z = results[(True, False)]
+    for k, (params, z) in results.items():
+        np.testing.assert_array_equal(z, ref_z, err_msg=str(k))
+        assert z.dtype == np.uint8, (k, z.dtype)
+        for name in ref_params:
+            np.testing.assert_array_equal(params[name], ref_params[name],
+                                          err_msg=f"{k} {name}")
+    print("sharded packed parity OK")
+""")
+
+
+def test_sharded_packed_parity_subprocess():
+    """uint8-packed fused training is bit-exact with the i32 boundary
+    under a 4-way data-sharded shard_map AND unsharded — all four
+    (packed x meshed) cells produce identical weights and readout."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT], env=env, cwd=ROOT,
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "sharded packed parity OK" in r.stdout

@@ -2,9 +2,10 @@
 (DESIGN.md §11), driven by the tests/proptest.py harness: cross-impl
 bit-exactness over sampled depth-1..4 cascades with heterogeneous,
 non-8-aligned geometries (including the per-layer fallback when a draw is
-not fused-capable), single-launch guarantees per depth, N-layer checkpoint
-fingerprint refusals, params-tree round-trips for N != 2, and the
-encode_images wave-spec validation.
+not fused-capable), the packed data-plane dtype axis (uint8 kernel IO vs
+the i32 boundary, DESIGN.md §14), single-launch guarantees per depth,
+N-layer checkpoint fingerprint refusals, params-tree round-trips for
+N != 2, and the encode_images wave-spec validation.
 
 CI runs this module as a dedicated step with a fixed seed and a raised
 randomized budget (``PROPTEST_SEED`` / ``PROPTEST_CASES``).
@@ -18,6 +19,7 @@ import pytest
 
 from proptest import (
     assert_cross_impl_parity,
+    assert_packed_parity,
     build_network,
     cases,
     env_budget,
@@ -60,6 +62,15 @@ def test_randomized_topology_forward_parity(spec):
     """Forward-only slice of the property — cheap extra coverage of the
     fused-capable region (serving has no STDP epilogue)."""
     assert_cross_impl_parity(spec, train=False)
+
+
+@cases(n=env_budget(6), spec=topology_specs(max_depth=4))
+def test_randomized_packed_dtype_parity(spec):
+    """The packed data-plane dtype axis (DESIGN.md §14): uint8-packed
+    kernel IO is bit-exact with the i32 boundary AND the direct reference
+    — forward z (carried as uint8), post-STDP weights, classify results —
+    on the same depth-1..4 / non-8-aligned draw distribution."""
+    assert_packed_parity(spec)
 
 
 @pytest.mark.parametrize("depth", [1, 2, 3, 4])

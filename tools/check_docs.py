@@ -34,6 +34,13 @@ Three checks, all run by CI next to the tier-1 pytest run:
    documents must exist in BOTH ``launch/train.py`` and
    ``launch/serve.py``, and the README must show the superbatch
    quickstart.
+7. **§14 anchors + the packed/tuner surface.** DESIGN.md §14 (the packed
+   data plane) must keep its anchor topics — dtype contract, widening,
+   autotuner cache, roofline methodology — the ``--packed`` flag it
+   documents must exist in BOTH launchers, the autotuner module and its
+   checked-in ``benchmarks/tuned_blocks.json`` cache must exist, and the
+   README must document the reproducible-benchmarking entry points
+   (``run.sh``, the tuner).
 
 Run from the repo root:
 
@@ -230,6 +237,55 @@ def check_section13_superbatch(root: pathlib.Path) -> list:
     return problems
 
 
+# §14 is the packed-data-plane section; these topics are its contract
+# with core/temporal.py (SPIKE_DTYPE), kernels/tnn_wave.py (boundary
+# dtypes), kernels/autotune.py and roofline/analysis.py, and must stay.
+SECTION14_ANCHORS = ("dtype contract", "widening", "autotuner cache",
+                     "roofline methodology")
+PACKED_FLAG = "--packed"
+
+
+def check_section14_packed(root: pathlib.Path) -> list:
+    """DESIGN.md §14 must exist with its anchor topics; the ``--packed``
+    flag it documents must exist in both launchers; the autotuner module +
+    checked-in cache must exist; and the README must document the
+    reproducible-benchmarking entry points."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§14\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append("DESIGN.md: no §14 section (packed data plane)")
+    else:
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION14_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §14: missing anchor topic {anchor!r}")
+    for rel in LAUNCHERS:
+        if f'"{PACKED_FLAG}"' not in (root / rel).read_text():
+            problems.append(
+                f"{rel}: missing {PACKED_FLAG} flag (DESIGN.md §14 "
+                f"documents it)")
+    if not (root / "src" / "repro" / "kernels" / "autotune.py").exists():
+        problems.append("src/repro/kernels/autotune.py: missing (DESIGN.md "
+                        "§14 documents the block autotuner)")
+    if not (root / "benchmarks" / "tuned_blocks.json").exists():
+        problems.append("benchmarks/tuned_blocks.json: missing — the tuned-"
+                        "block cache is checked in for reproducible plans "
+                        "(DESIGN.md §14); run `python -m "
+                        "repro.kernels.autotune` to regenerate")
+    readme = (root / "README.md").read_text()
+    for needle, why in (("run.sh", "the pinned-environment launcher"),
+                        ("autotune", "the block autotuner"),
+                        (PACKED_FLAG, "the packed data-plane flag")):
+        if needle not in readme:
+            problems.append(
+                f"README.md: never mentions {needle} — the §14 reproducible-"
+                f"benchmarking subsection must document {why}")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -257,9 +313,10 @@ def main() -> int:
     s11_problems = check_section11_and_factory(root)
     s12_problems = check_section12_serving(root)
     s13_problems = check_section13_superbatch(root)
+    s14_problems = check_section14_packed(root)
 
     if (dangling or backend_problems or launcher_problems or s11_problems
-            or s12_problems or s13_problems):
+            or s12_problems or s13_problems or s14_problems):
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -284,13 +341,19 @@ def main() -> int:
             print("check_docs: §13 / superbatch problems:", file=sys.stderr)
             for p in s13_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s14_problems:
+            print("check_docs: §14 / packed data-plane problems:",
+                  file=sys.stderr)
+            for p in s14_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
           f"names only accepted impls; launcher --impl choices match "
           f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact; "
           f"§12 anchors + serving flags + loadgen intact; §13 anchors + "
-          f"{SUPERBATCH_FLAG} launcher flags intact")
+          f"{SUPERBATCH_FLAG} launcher flags intact; §14 anchors + "
+          f"{PACKED_FLAG}/tuner surface intact")
     return 0
 
 
