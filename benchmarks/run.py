@@ -59,7 +59,8 @@ default all-backend artifact and an ``--impl fused`` one);
 ``--deep-only`` runs the 3-layer cascade bench — the ONLY mode that emits
 the deep rows, so their gate has a single committed baseline (the
 ``bench-deep.json`` artifact vs ``benchmarks/baseline-deep.json``);
-``--serve`` likewise runs only the serving load-generation grid (the
+``--serve`` likewise runs only the serving load-generation grid plus the
+learn-while-serving ``tnn_online_serve`` row (DESIGN.md §15; the
 ``bench-serve.json`` artifact vs ``benchmarks/baseline-serve.json``).
 """
 from __future__ import annotations
@@ -700,6 +701,50 @@ def tnn_serve_throughput(smoke: bool = False,
         eng.reset()
 
 
+def tnn_online_serve_throughput(smoke: bool = False) -> None:
+    """Learn-while-serving throughput (DESIGN.md §15): the fused depth-2
+    engine drains a labelled closed-loop backlog with ``online_stdp`` on —
+    every wave also runs the STDP epilogue into the shadow weights — and
+    hot-swaps on a cadence that lands ~2 swaps per drain, so the measured
+    waves/sec INCLUDES the learning epilogue, the vote-table relabels and
+    the atomic publishes. Emits the gated ``tnn_online_serve`` row plus the
+    loadgen A/B probe's first/last-version accuracies (reported, not
+    gated — readout quality, not speed)."""
+    lg = _loadgen()
+    sites = int(os.environ.get("TNN_SERVE_SITES", "16"))
+    slots = 8
+    n_req = 64 if smoke else 128
+    reps = 3  # best-of; each rep re-learns, so fewer than the serve grid
+    swap_every = max(n_req // (2 * slots), 1)
+    print(f"\n== TNN learn-while-serving: online STDP + hot swap "
+          f"({sites} sites, {slots} slots, {n_req} requests, "
+          f"swap every {swap_every} waves, best of {reps}) ==")
+    eng = lg.build_engine(sites=sites, slots=slots, impl="fused", depth=2,
+                          online_stdp=True, swap_every=swap_every)
+    imgs, labs = lg.labelled_images(sites, n_req)
+    lg.run_closed_loop(eng, imgs, slots)  # warm the jitted online path
+    eng.reset()
+    best, best_ab = None, None
+    for _ in range(reps):
+        st = lg.run_closed_loop(eng, imgs, n_req, pipelined=True)
+        ab = lg.ab_accuracy(eng.done, labs)
+        eng.reset()
+        if best is None or st.waves_per_s > best.waves_per_s:
+            best, best_ab = st, ab
+    swaps = eng.swaps
+    vs = sorted(best_ab)
+    acc_v, acc_v1 = best_ab[vs[0]][0], best_ab[vs[-1]][0]
+    print(f"online fused d2: {best.waves_per_s:8.2f} waves/s "
+          f"({best.images_per_s:9.1f} images/s)  p50 {best.p50_ms:6.1f} ms  "
+          f"p95 {best.p95_ms:6.1f} ms  {swaps} swap(s) total  "
+          f"accuracy v{vs[0]} {acc_v:.1%} -> v{vs[-1]} {acc_v1:.1%}")
+    _emit("tnn_online_serve", 1e6 * best.wall_s / max(best.waves, 1),
+          waves_per_s=round(best.waves_per_s, 3),
+          images_per_s=round(best.images_per_s, 1),
+          p50_ms=round(best.p50_ms, 3), p95_ms=round(best.p95_ms, 3),
+          swaps=swaps, acc_v=round(acc_v, 4), acc_v1=round(acc_v1, 4))
+
+
 def lm_step_micro(smoke: bool = False) -> None:
     import jax
     from repro.configs import smoke_config
@@ -783,6 +828,7 @@ def main() -> None:
         tnn_deep_wave_throughput(smoke=args.smoke, impls=impls)
     elif args.serve:
         tnn_serve_throughput(smoke=args.smoke, impls=impls, depths=(2, 3))
+        tnn_online_serve_throughput(smoke=args.smoke)
     else:
         table1_columns()
         table2_prototype()

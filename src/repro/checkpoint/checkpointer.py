@@ -145,17 +145,28 @@ class Checkpointer:
 
     def _write(self, step: int, leaves, meta) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
+        tmp, old = final + ".tmp", final + ".old"
+        for stale in (tmp, old):
+            if os.path.exists(stale):
+                shutil.rmtree(stale)
         os.makedirs(tmp)
         for p, a in leaves:
             np.save(os.path.join(tmp, _fname(p)), a)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+        # Re-saving an existing step (a trainer re-checkpointing its resume
+        # point, an online-serve swap cadence landing twice on one wave)
+        # must stay crash-atomic. Deleting the live dir before the rename
+        # would open a window where a crash destroys the step with no
+        # replacement; instead the live dir is moved aside in one rename
+        # and the fresh one moved in with a second, so at every instant
+        # every VISIBLE step dir is complete (``all_steps`` skips the
+        # .tmp/.old suffixes) and the worst a crash between the renames
+        # leaves is the previous step as latest.
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)
+        shutil.rmtree(old, ignore_errors=True)
         self._gc()
 
     def wait(self) -> None:

@@ -28,7 +28,10 @@ from repro.core.network import (
     init_network,
     init_train_state,
     encode_images,
+    forward_all_padded,
     input_wave_spec,
+    make_online_step,
+    make_online_superbatch_step,
     make_superbatch_step,
     make_train_step,
     network_forward,
@@ -38,6 +41,7 @@ from repro.core.network import (
     network_train_wave,
     params_from_tree,
     params_to_tree,
+    refresh_vote_table,
     superbatch_keys,
     build_vote_table,
     classify,
@@ -55,10 +59,12 @@ __all__ = [
     "column_step", "crossing_time", "init_weights", "wta_inhibit",
     "LayerConfig", "init_layer", "layer_forward", "layer_stdp_net", "layer_step",
     "NetworkConfig", "prototype_config", "init_network", "init_train_state",
-    "encode_images", "input_wave_spec", "make_superbatch_step",
+    "encode_images", "forward_all_padded", "input_wave_spec",
+    "make_online_step", "make_online_superbatch_step", "make_superbatch_step",
     "make_train_step", "network_forward", "network_forward_superbatch",
     "network_train_step", "network_train_superbatch", "network_train_wave",
-    "params_from_tree", "params_to_tree", "superbatch_keys",
+    "params_from_tree", "params_to_tree", "refresh_vote_table",
+    "superbatch_keys",
     "build_vote_table", "classify", "build_centroids", "classify_centroid", "with_impl",
     "hwmodel", "macros",
 ]

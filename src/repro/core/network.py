@@ -493,6 +493,150 @@ def init_train_state(rng: jax.Array, cfg: NetworkConfig) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# Learn-while-serving: classify under published weights, learn on shadow (§15).
+# ---------------------------------------------------------------------------
+
+
+def make_online_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
+    """Build the jitted learn-while-serving step:
+    ``(serve_params, state, x) -> (state, z_serve)`` (DESIGN.md §15).
+
+    One gamma wave runs BOTH halves of online mode. The request batch is
+    classified by a forward under the PUBLISHED serving weights
+    ``serve_params`` (``weights_v`` — read-only inside the step), while
+    the same volley drives one :func:`network_train_step` on the shadow
+    training state (``weights_v+1``). The shadow half is byte-for-byte
+    the :func:`make_train_step` body — same ``rng`` split, same
+    counter-form STDP with the psum over ``axis_name``, same wave-counter
+    advance — so N online-served learning waves produce bit-identical
+    shadow weights to N trainer steps on the same volley stream
+    (``tests/test_online_serving.py`` asserts it per backend and under a
+    sharded mesh). Pad rows (spike time T everywhere) fire no synapse and
+    no neuron, so every STDP case plane is False for them: partial waves
+    are learning-inert beyond their real rows, and serving's no-op
+    padding never perturbs the shadow stream.
+
+    The ``state`` buffers are donated (the weight update happens in
+    place); ``serve_params`` is NOT — it keeps serving until the next hot
+    swap publishes the shadow — so callers must never alias the two.
+    """
+    for l in cfg.layers:
+        if l.column.stdp.batch_reduce != "sum":
+            raise ValueError("make_online_step requires batch_reduce='sum'")
+
+    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+
+    def step(serve_params, state, x):
+        params = params_from_tree(state["params"], cfg)
+        key, sub = jax.random.split(state["rng"])
+        _, new_params = network_train_step(
+            x, params, cfg, sub,
+            axis_name=None if mesh is None else "data",
+            data_shards=n_data,
+        )
+        z = network_forward(x, list(serve_params), cfg)[-1]
+        new_state = {
+            "params": params_to_tree(new_params),
+            "rng": key,
+            "wave": state["wave"] + 1,
+        }
+        return new_state, z
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import shard_map
+
+        step = shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P("data")),
+        )
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+def make_online_superbatch_step(cfg: NetworkConfig, mesh=None,
+                                donate: bool = True):
+    """The K-wave form of :func:`make_online_step`:
+    ``(serve_params, state, x_k) -> (state, z_k)`` with ``x_k`` shaped
+    (K, B, C, p) — one jitted dispatch classifies K admitted waves under
+    the published weights (``lax.scan``, DESIGN.md §13) while the shadow
+    state learns through :func:`network_train_superbatch` with the same
+    :func:`superbatch_keys` pre-split the trainer uses, so online
+    superbatch learning stays bit-exact with K sequential online steps —
+    and therefore with the trainer at any ``superbatch_k``."""
+    for l in cfg.layers:
+        if l.column.stdp.batch_reduce != "sum":
+            raise ValueError("make_online_superbatch_step requires "
+                             "batch_reduce='sum'")
+
+    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+
+    def step(serve_params, state, x_k):
+        k = x_k.shape[0]
+        params = params_from_tree(state["params"], cfg)
+        key, subs = superbatch_keys(state["rng"], k)
+        _, new_params = network_train_superbatch(
+            x_k, params, cfg, subs,
+            axis_name=None if mesh is None else "data",
+            data_shards=n_data,
+        )
+        z_k = network_forward_superbatch(x_k, list(serve_params), cfg)[-1]
+        new_state = {
+            "params": params_to_tree(new_params),
+            "rng": key,
+            "wave": state["wave"] + k,
+        }
+        return new_state, z_k
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import shard_map
+
+        step = shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(), P(None, "data")),
+            out_specs=(P(), P(None, "data")),
+        )
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+def forward_all_padded(forward_fn, params, x, batch: int, T: int) -> jax.Array:
+    """Chunked fixed-shape forward over any number of encoded rows.
+
+    Slices ``x`` ((N, C, p) spike times) into ``batch``-row chunks, pads
+    the ragged tail with the shared no-op encoding (spike time ``T`` —
+    the SAME convention serving's admission path uses) and concatenates
+    the last layer's post-WTA times back to (N, C, q). ``forward_fn`` is
+    a jitted ``(params, x) -> z`` — the trainer's and the engine's
+    forwards both fit, which is what makes the labelling pass one shared
+    code path (DESIGN.md §15)."""
+    outs = []
+    for off in range(0, x.shape[0], batch):
+        chunk = jnp.asarray(x[off:off + batch])
+        k = chunk.shape[0]
+        chunk = _kpad.pad_batch_rows(chunk, batch, T)
+        outs.append(forward_fn(params, chunk)[:k])
+    return jnp.concatenate(outs, axis=0)
+
+
+def refresh_vote_table(forward_fn, params, x, labels, cfg: NetworkConfig,
+                       batch: int) -> jax.Array:
+    """One labelled pass -> fresh vote table for the given weights.
+
+    THE vote-table refresh both stacks share: ``TNNTrainer.evaluate``
+    rebuilds its readout through this at every eval cadence point, and
+    ``TNNEngine`` calls it from ``fit`` and from every online hot swap
+    (rebuilding the readout at ``weights_v+1`` before publishing,
+    DESIGN.md §15) — so a swap-published vote table is bit-identical to
+    the one the trainer would checkpoint for the same weights."""
+    T = cfg.layers[-1].column.wave.T
+    z = forward_all_padded(forward_fn, params, x, batch, T)
+    return build_vote_table(z, jnp.asarray(labels), cfg.n_classes, T)
+
+
+# ---------------------------------------------------------------------------
 # Unsupervised readout: label neurons by the classes they win on, then vote.
 # ---------------------------------------------------------------------------
 

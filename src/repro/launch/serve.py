@@ -20,6 +20,18 @@ the deployment path after ``launch/train.py --arch tnn-mnist``:
 
     PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
         --from-ckpt /tmp/tnn_ckpt --sites 16 --requests 16
+
+``--online-stdp`` turns on learn-while-serving (DESIGN.md §15): every
+served wave also runs the STDP epilogue on a shadow state, and every
+``--swap-every`` learning waves the engine re-labels, checkpoints and
+atomically hot-swaps the published weights/vote table; the run report adds
+per-version ServeStats. Combined with ``--from-ckpt`` the shadow stream
+CONTINUES the trainer's (restored RNG + wave counter) and swap checkpoints
+land back in the same directory:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tnn-mnist \
+        --from-ckpt /tmp/tnn_ckpt --sites 16 --requests 64 \
+        --online-stdp --swap-every 4
 """
 from __future__ import annotations
 
@@ -86,30 +98,36 @@ def serve_tnn(args: argparse.Namespace) -> None:
                                   impl=args.impl, packed=args.packed)
     print(f"serving tnn-mnist ({cfg.n_neurons:,} neurons, impl={args.impl}) "
           f"on {describe(mesh)}")
+    lab_imgs, lab_labs = digits(max(128, 4 * n_slots), seed=1)
+    lab_imgs = crop_field(lab_imgs, args.sites)
     if args.from_ckpt:
         # trained deployment: weights + vote table from the training
-        # checkpoint, no warm-up or fit pass (DESIGN.md §9)
+        # checkpoint (rebuilt from label_data when the checkpoint predates
+        # any labelling pass), no warm-up needed (DESIGN.md §9); with
+        # --online-stdp the shadow stream continues the trainer's and swap
+        # checkpoints land back in the same directory (DESIGN.md §15)
         eng = TNNEngine.from_checkpoint(
             args.from_ckpt, cfg, n_slots=n_slots, impl=args.impl, mesh=mesh,
-            superbatch_k=args.superbatch_k)
-        print(f"warm-started from {args.from_ckpt} "
-              f"(vote table: {eng.vote_table is not None})")
-        if eng.vote_table is None:
-            imgs, labs = digits(max(128, 4 * n_slots), seed=1)
-            eng.fit(crop_field(imgs, args.sites), labs)
+            superbatch_k=args.superbatch_k,
+            label_data=(lab_imgs, lab_labs),
+            online_stdp=args.online_stdp, swap_every=args.swap_every)
+        print(f"warm-started from {args.from_ckpt} at wave "
+              f"{int(eng.learn_state['wave']) if eng.learn_state else '-'}"
+              if args.online_stdp else
+              f"warm-started from {args.from_ckpt}")
     else:
         params = init_network(jax.random.PRNGKey(0), cfg)
-        imgs, labs = digits(max(128, 4 * n_slots), seed=1)
-        imgs = crop_field(imgs, args.sites)
-        x = jnp.asarray(encode_images(jnp.asarray(imgs), cfg))
+        x = jnp.asarray(encode_images(jnp.asarray(lab_imgs), cfg))
         key = jax.random.PRNGKey(1)
         for _ in range(args.train_waves):  # short unsupervised warm-up
             key, k = jax.random.split(key)
             _, params = network_train_wave(x[:16], params, cfg, k)
 
         eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl,
-                        mesh=mesh, superbatch_k=args.superbatch_k)
-        eng.fit(imgs, labs)
+                        mesh=mesh, superbatch_k=args.superbatch_k,
+                        online_stdp=args.online_stdp,
+                        swap_every=args.swap_every)
+        eng.fit(lab_imgs, lab_labs)
 
     test_imgs, test_labs = digits(args.requests, seed=2)
     test_imgs = crop_field(test_imgs, args.sites)
@@ -124,6 +142,17 @@ def serve_tnn(args: argparse.Namespace) -> None:
     print(f"[serve-stats] {st.waves_per_s:.1f} waves/s  "
           f"{st.images_per_s:.1f} images/s  p50 {st.p50_ms:.1f} ms  "
           f"p95 {st.p95_ms:.1f} ms  occupancy {st.occupancy:.0%}")
+    if args.online_stdp:
+        print(f"[online-stdp] learned to wave "
+              f"{int(eng.learn_state['wave'])}, {eng.swaps} hot swap(s), "
+              f"now serving v{eng.version}")
+        for ver, sv in eng.stats_by_version().items():
+            v_acc = float(np.mean([done[u].result == test_labs[u]
+                                   for u in done
+                                   if done[u].version == ver] or [np.nan]))
+            print(f"  v{ver}: {sv.requests} requests / {sv.waves} waves  "
+                  f"p50 {sv.p50_ms:.1f} ms  p95 {sv.p95_ms:.1f} ms  "
+                  f"accuracy {v_acc:.1%}")
 
 
 def main() -> None:
@@ -165,6 +194,17 @@ def main() -> None:
     ap.add_argument("--from-ckpt", default=None, metavar="DIR",
                     help="warm-start from a TNN training checkpoint "
                          "(weights + vote table; DESIGN.md §9)")
+    ap.add_argument("--online-stdp", action="store_true",
+                    help="learn while serving: run the STDP epilogue on "
+                         "every served wave into a shadow weight version "
+                         "and hot-swap it in on the --swap-every cadence "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--swap-every", type=int, default=8,
+                    help="learning waves between automatic hot swaps in "
+                         "--online-stdp mode: each swap re-labels the vote "
+                         "table at the shadow weights, checkpoints, and "
+                         "publishes atomically; 0 swaps only on explicit "
+                         "hot_swap() calls (DESIGN.md §15)")
     args = ap.parse_args()
     if args.arch == "tnn-mnist":
         serve_tnn(args)

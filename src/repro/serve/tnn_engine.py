@@ -49,6 +49,26 @@ every served request is classified by the soft site vote. A trained
 deployment skips ``fit`` entirely: :meth:`TNNEngine.from_checkpoint`
 warm-starts weights AND vote table from a TNN training checkpoint
 (DESIGN.md §9), so serving picks up exactly where training left off.
+
+**Learn while serving** (``online_stdp=True``, DESIGN.md §15): the paper's
+prototype is an *online*-learning sensory processor, so the engine can run
+the STDP-counter epilogue on live traffic. Every served wave then executes
+``core.network.make_online_step`` — ONE dispatch that classifies the batch
+under the published ``weights_v`` AND advances a shadow training state
+(``weights_v+1``) with byte-for-byte the trainer's step (same RNG split,
+same counter form, psum'd over the mesh) — so the shadow weights stay
+bit-exact with ``TNNTrainer`` on the same volley stream. On the
+``swap_every`` cadence (or an explicit :meth:`hot_swap`) the engine
+rebuilds the vote table at v+1 through the shared
+``core.network.refresh_vote_table`` pass, checkpoints shadow state + table
+through the crash-safe ``Checkpointer``, and PUBLISHES atomically: params,
+vote table and version live in one ``_published`` tuple that every
+dispatch snapshots exactly once, so an in-flight wave keeps classifying
+against the immutable v arrays while new admissions see v+1 — zero
+requests dropped, duplicated, or classified against a half-published
+version. Requests record the version they were classified under;
+:meth:`TNNEngine.stats_by_version` splits the latency/occupancy record per
+version (the A/B surface ``tools/loadgen.py``'s labelled probe reads).
 """
 from __future__ import annotations
 
@@ -64,11 +84,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.network import (
     NetworkConfig,
-    build_vote_table,
     classify,
     encode_images,
+    init_train_state,
+    make_online_step,
+    make_online_superbatch_step,
     network_forward,
     network_forward_superbatch,
+    params_from_tree,
+    params_to_tree,
+    refresh_vote_table,
     with_impl,
 )
 from repro.kernels.padding import pad_batch_rows
@@ -82,6 +107,7 @@ class ClassifyRequest:
     result: Optional[int] = None  # class id, filled when served
     t_enqueue: Optional[float] = None  # perf_counter at submit()
     t_done: Optional[float] = None  # perf_counter when the wave retired
+    version: Optional[int] = None  # params/vote-table version classified under
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -108,18 +134,28 @@ class ServeStats:
 
 
 class ServeTimeout(RuntimeError):
-    """``run_until_done`` hit ``max_ticks`` with requests still queued.
+    """``run_until_done`` hit ``max_ticks`` with requests outstanding.
 
     Carries the served/unserved split so callers can account for every
-    request instead of discovering a silently partial ``done`` dict."""
+    request instead of discovering a silently partial ``done`` dict.
+    ``unserved`` counts BOTH the queued requests and any wave the
+    double-buffered ``poll`` staged but had not retired at the limit
+    (``in_flight`` gives that slice on its own): the timeout path never
+    blocks on a dispatch that may be the very thing hanging, so those
+    requests are not in ``done`` yet — they stay in flight and a later
+    ``poll``/``run_until_done`` retires them, with ``served + unserved``
+    covering every submitted uid at all times."""
 
-    def __init__(self, served: int, unserved: int, max_ticks: int):
+    def __init__(self, served: int, unserved: int, max_ticks: int,
+                 in_flight: int = 0):
         self.served = served
         self.unserved = unserved
         self.max_ticks = max_ticks
+        self.in_flight = in_flight
         super().__init__(
             f"run_until_done hit max_ticks={max_ticks} with {unserved} "
-            f"request(s) still queued ({served} served)")
+            f"request(s) outstanding ({served} served, {in_flight} of the "
+            f"unserved still in flight)")
 
 
 class TNNEngine:
@@ -140,6 +176,21 @@ class TNNEngine:
         superbatch_k: max gamma waves one ``poll`` dispatch may scan on
             device when the admission queue is deeper than ``n_slots``
             (DESIGN.md §13); 1 = one wave per dispatch (the PR-5 pipeline).
+        online_stdp: learn while serving (DESIGN.md §15) — every served
+            wave also drives the STDP epilogue on a shadow training state
+            that :meth:`hot_swap` publishes; requests keep classifying
+            against the stable published version in between.
+        swap_every: learning waves between automatic hot swaps (0 = only
+            explicit :meth:`hot_swap` calls publish); needs ``fit`` or
+            :meth:`set_label_data` first, since a swap rebuilds the vote
+            table at the new weights.
+        seed: PRNG seed for the shadow stream when ``online_stdp`` starts
+            fresh — matches ``TNNTrainConfig.seed``'s key chain, so an
+            engine seeded like a trainer learns the trainer's exact
+            stream (``from_checkpoint`` overrides this with the restored
+            RNG/wave to continue a trained stream instead).
+        ckpt_dir: where hot swaps checkpoint the published state (None =
+            swaps skip the checkpoint write).
     """
 
     def __init__(
@@ -150,22 +201,35 @@ class TNNEngine:
         impl: str = "pallas",
         mesh: Optional[Mesh] = None,
         superbatch_k: int = 1,
+        online_stdp: bool = False,
+        swap_every: int = 0,
+        seed: int = 0,
+        ckpt_dir: Optional[str] = None,
     ):
         cfg = with_impl(cfg, impl)
         cfg.validate()
         if superbatch_k < 1:
             raise ValueError(f"superbatch_k={superbatch_k} must be >= 1")
+        if swap_every < 0:
+            raise ValueError(f"swap_every={swap_every} must be >= 0")
+        if swap_every and not online_stdp:
+            raise ValueError("swap_every needs online_stdp=True — there is "
+                             "no shadow state to swap in otherwise")
         if mesh is not None:
             ndata = mesh.shape.get("data", 1)
             if n_slots % max(ndata, 1):
                 raise ValueError(f"n_slots={n_slots} not divisible by "
                                  f"data axis size {ndata}")
         self.cfg = cfg
-        self.params = list(params)
         self.n_slots = n_slots
         self.mesh = mesh
         self.superbatch_k = superbatch_k
-        self.vote_table: Optional[jax.Array] = None
+        # THE published snapshot (DESIGN.md §15): params, vote table and
+        # version move together in one tuple — dispatch reads it exactly
+        # once per wave and a hot swap replaces it in one assignment, so
+        # no request can ever see v's weights with v+1's vote table.
+        self._published: Tuple[List[jax.Array], Optional[jax.Array], int] = (
+            list(params), None, 0)
         self.T = cfg.layers[-1].column.wave.T
         self.queue: Deque[ClassifyRequest] = collections.deque()
         self.done: Dict[int, ClassifyRequest] = {}
@@ -178,6 +242,41 @@ class TNNEngine:
         self._slots_filled = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        # per-version accounting: version -> [lat_ms...], waves, slots
+        self._lat_by_ver: Dict[int, List[float]] = {}
+        self._waves_by_ver: Dict[int, int] = {}
+        self._slots_by_ver: Dict[int, int] = {}
+        self._span_by_ver: Dict[int, Tuple[float, float]] = {}
+
+        # learn-while-serving half (DESIGN.md §15)
+        self.online_stdp = online_stdp
+        self.swap_every = swap_every
+        self.swaps = 0
+        self._learn_waves = 0  # learning waves since the last hot swap
+        self._label_set: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        if ckpt_dir is not None:
+            from repro.checkpoint.checkpointer import Checkpointer
+
+            self.ckpt: Optional["Checkpointer"] = Checkpointer(ckpt_dir)
+        else:
+            self.ckpt = None
+        if online_stdp:
+            self._online = make_online_step(cfg, mesh=mesh)
+            self._online_sb = (make_online_superbatch_step(cfg, mesh=mesh)
+                               if superbatch_k > 1 else None)
+            # the shadow stream starts AT the served weights with the
+            # trainer's key chain; COPIES, never aliases — the online
+            # step donates the shadow buffers, the published ones must
+            # survive until the next swap
+            st = init_train_state(jax.random.PRNGKey(seed), cfg)
+            self.learn_state: Optional[Dict] = {
+                "params": params_to_tree([jnp.array(w) for w in params]),
+                "rng": st["rng"],
+                "wave": st["wave"],
+            }
+        else:
+            self._online = self._online_sb = None
+            self.learn_state = None
 
         # Staging half: the jitted encoder runs on the ragged admitted
         # batch (at most n_slots distinct shapes ever compile) so partial
@@ -208,6 +307,33 @@ class TNNEngine:
         self._classify = jax.jit(
             lambda z, vt: classify(z, vt, self.T, soft=True))
 
+    # -- published snapshot (DESIGN.md §15) --------------------------------
+
+    @property
+    def params(self) -> List[jax.Array]:
+        """The published serving weights (``weights_v``)."""
+        return self._published[0]
+
+    @params.setter
+    def params(self, ps: Sequence[jax.Array]) -> None:
+        _, vt, ver = self._published
+        self._published = (list(ps), vt, ver)
+
+    @property
+    def vote_table(self) -> Optional[jax.Array]:
+        """The published vote-table readout for ``weights_v``."""
+        return self._published[1]
+
+    @vote_table.setter
+    def vote_table(self, vt: Optional[jax.Array]) -> None:
+        ps, _, ver = self._published
+        self._published = (ps, vt, ver)
+
+    @property
+    def version(self) -> int:
+        """Publish counter: bumped by every :meth:`hot_swap`."""
+        return self._published[2]
+
     @classmethod
     def from_checkpoint(
         cls,
@@ -219,6 +345,10 @@ class TNNEngine:
         impl: str = "pallas",
         mesh: Optional[Mesh] = None,
         superbatch_k: int = 1,
+        label_data: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+        online_stdp: bool = False,
+        swap_every: int = 0,
+        swap_ckpt_dir: Optional[str] = None,
     ) -> "TNNEngine":
         """Warm-start serving from a TNN training checkpoint.
 
@@ -227,38 +357,79 @@ class TNNEngine:
         engine classifies immediately without a ``fit`` pass. ``step=None``
         takes the latest checkpoint. The checkpoint carries no mesh info,
         so the same files warm-start any serving mesh (DESIGN.md §9).
+
+        A checkpoint written BEFORE any labelling pass has no usable vote
+        table (``extra["has_vote"]`` falsy — the stored array is the
+        all-zeros placeholder): pass ``label_data=(images, labels)`` to
+        rebuild the readout at load through the shared
+        ``refresh_vote_table`` pass, otherwise this fails fast here with
+        the remedy instead of serving garbage or crashing later.
+
+        With ``online_stdp=True`` the shadow stream CONTINUES the
+        trainer's: the restored RNG key and wave counter seed the shadow
+        state, so N more online-served learning waves equal the trainer
+        resuming for N waves on the same stream (DESIGN.md §15). Swap
+        checkpoints go back to ``ckpt_dir`` (override: ``swap_ckpt_dir``)
+        — serve, learn, swap, restart, and the next warm start picks up
+        the adapted weights.
         """
         from repro.checkpoint.checkpointer import Checkpointer, restore_tnn
-        from repro.core.network import params_from_tree
 
         state, extra = restore_tnn(Checkpointer(ckpt_dir), cfg, step)
         eng = cls(cfg, params_from_tree(state["params"], cfg),
                   n_slots=n_slots, impl=impl, mesh=mesh,
-                  superbatch_k=superbatch_k)
+                  superbatch_k=superbatch_k, online_stdp=online_stdp,
+                  swap_every=swap_every,
+                  ckpt_dir=(swap_ckpt_dir or ckpt_dir) if online_stdp
+                  else swap_ckpt_dir)
+        if online_stdp:
+            eng.learn_state = {
+                "params": params_to_tree(
+                    [jnp.array(w) for w in eng.params]),
+                "rng": jnp.asarray(state["rng"]),
+                "wave": jnp.asarray(state["wave"]),
+            }
+        if label_data is not None:
+            eng.set_label_data(*label_data)
         if extra.get("has_vote"):
             eng.vote_table = state["vote_table"]
+        elif label_data is not None:
+            x, labs = eng._label_set
+            eng.vote_table = refresh_vote_table(
+                eng._forward, eng.params, x, labs, cfg, n_slots)
+        else:
+            raise ValueError(
+                f"checkpoint step {extra.get('wave', step)} under "
+                f"{ckpt_dir!r} has no vote table (extra['has_vote'] is "
+                f"falsy — the trainer checkpointed before any labelling "
+                f"pass, so the stored table is the all-zeros placeholder "
+                f"and every classify would be meaningless). Pass "
+                f"label_data=(images, labels) to rebuild the readout at "
+                f"load, or warm-start from a checkpoint written after an "
+                f"eval pass.")
         return eng
 
     # -- readout ----------------------------------------------------------
 
+    def set_label_data(self, images: np.ndarray, labels: np.ndarray) -> None:
+        """Store the labelled set (encoded once, host-side) that
+        :meth:`fit` and every online :meth:`hot_swap` rebuild the vote
+        table from (DESIGN.md §15)."""
+        imgs = jnp.asarray(np.asarray(images, np.float32))
+        xs = [np.asarray(self._encode(imgs[off:off + self.n_slots]))
+              for off in range(0, imgs.shape[0], self.n_slots)]
+        self._label_set = (np.concatenate(xs, axis=0),
+                           np.asarray(labels))
+
     def fit(self, images: np.ndarray, labels: np.ndarray) -> None:
         """Build the vote-table readout from one labelled pass (the paper's
         neuron-labelling phase; weights are NOT updated — learning stays in
-        the training drivers)."""
-        z = self._forward_batched(jnp.asarray(images, jnp.float32))
-        self.vote_table = build_vote_table(
-            z, jnp.asarray(labels), self.cfg.n_classes, self.T)
-
-    def _forward_batched(self, imgs: jax.Array) -> jax.Array:
-        """Run any number of images through the fixed-slot forward."""
-        n = imgs.shape[0]
-        outs = []
-        for off in range(0, n, self.n_slots):
-            chunk = imgs[off:off + self.n_slots]
-            k = chunk.shape[0]
-            x = pad_batch_rows(self._encode(chunk), self.n_slots, self.T)
-            outs.append(self._forward(self.params, x)[:k])
-        return jnp.concatenate(outs, axis=0)
+        the training drivers and the §15 online mode). The labelled set is
+        kept for online hot swaps to re-label against."""
+        self.set_label_data(images, labels)
+        x, labs = self._label_set
+        self.vote_table = refresh_vote_table(
+            self._forward, self.params, x, labs, self.cfg, self.n_slots)
 
     # -- request loop ------------------------------------------------------
 
@@ -306,11 +477,24 @@ class TNNEngine:
         """Stage one wave and launch it asynchronously: host-side image
         stacking, jitted encode, no-op padding to the fixed slot shape,
         forward, classify. Returns the (still in-flight) predictions —
-        nothing here blocks on device results."""
+        nothing here blocks on device results. The published
+        (params, vote table, version) tuple is snapshotted EXACTLY once,
+        so a hot swap landing mid-flight never mixes versions; in online
+        mode the same dispatch also advances the shadow state through
+        ``make_online_step`` (pad rows are STDP-inert, so partial waves
+        learn only their real rows — DESIGN.md §15)."""
+        ps, vt, ver = self._published  # one atomic snapshot per dispatch
         if self._t_first is None:
             self._t_first = time.perf_counter()
-        z = self._forward(self.params, self._stage_wave(admitted))
-        return self._classify(z, self.vote_table)
+        x = self._stage_wave(admitted)
+        if self._online is not None:
+            self.learn_state, z = self._online(ps, self.learn_state, x)
+            self._learn_waves += 1
+        else:
+            z = self._forward(ps, x)
+        for req in admitted:
+            req.version = ver
+        return self._classify(z, vt)
 
     def _dispatch_super(self,
                         waves: List[List[ClassifyRequest]]) -> jax.Array:
@@ -320,13 +504,24 @@ class TNNEngine:
         inter-wave loop inside the jit, and the classify readout covers all
         K x n_slots rows at once (classify is row-independent, so per-uid
         results are bit-identical to K separate dispatches). Returns the
-        (still in-flight) (k, n_slots) predictions."""
+        (still in-flight) (k, n_slots) predictions. Online mode scans the
+        shadow train step alongside (``make_online_superbatch_step``),
+        with the whole superbatch classified under ONE published
+        snapshot."""
+        ps, vt, ver = self._published  # one atomic snapshot per dispatch
         if self._t_first is None:
             self._t_first = time.perf_counter()
         x_k = jnp.stack([self._stage_wave(w) for w in waves])
-        z_k = self._forward_sb(self.params, x_k)  # (k, slots, S, q)
-        preds = self._classify(
-            z_k.reshape(-1, *z_k.shape[2:]), self.vote_table)
+        if self._online_sb is not None:
+            self.learn_state, z_k = self._online_sb(
+                ps, self.learn_state, x_k)
+            self._learn_waves += len(waves)
+        else:
+            z_k = self._forward_sb(ps, x_k)  # (k, slots, S, q)
+        for w in waves:
+            for req in w:
+                req.version = ver
+        preds = self._classify(z_k.reshape(-1, *z_k.shape[2:]), vt)
         return preds.reshape(len(waves), self.n_slots)
 
     def _retire(self, waves: List[List[ClassifyRequest]],
@@ -338,13 +533,20 @@ class TNNEngine:
         preds = np.asarray(preds_dev)
         now = time.perf_counter()
         for w, admitted in enumerate(waves):
+            ver = admitted[0].version  # one snapshot per dispatch: uniform
             for slot, req in enumerate(admitted):
                 req.result = int(preds[w, slot])
                 req.t_done = now
                 self.done[req.uid] = req
-                self._lat_ms.append(
-                    1e3 * (now - req.t_enqueue) if req.t_enqueue else 0.0)
+                lat = 1e3 * (now - req.t_enqueue) if req.t_enqueue else 0.0
+                self._lat_ms.append(lat)
+                self._lat_by_ver.setdefault(ver, []).append(lat)
             self._slots_filled += len(admitted)
+            self._waves_by_ver[ver] = self._waves_by_ver.get(ver, 0) + 1
+            self._slots_by_ver[ver] = (self._slots_by_ver.get(ver, 0)
+                                       + len(admitted))
+            first, _ = self._span_by_ver.get(ver, (now, now))
+            self._span_by_ver[ver] = (first, now)
         self.waves_served += len(waves)
         self._t_last = now
 
@@ -356,6 +558,62 @@ class TNNEngine:
         self._retire(waves, preds)
         return sum(len(w) for w in waves)
 
+    def _maybe_swap(self) -> None:
+        """Run the automatic swap cadence: publish the shadow weights once
+        ``swap_every`` learning waves have accumulated. Called at the top
+        of every tick — BETWEEN polls — so the wave staged next classifies
+        under the fresh version while anything already in flight keeps its
+        snapshotted v arrays (DESIGN.md §15)."""
+        if self.swap_every and self._learn_waves >= self.swap_every:
+            self.hot_swap()
+
+    def hot_swap(self, block: bool = False) -> int:
+        """Atomically publish the shadow weights as version v+1.
+
+        The swap protocol (DESIGN.md §15), in order: (1) re-label — build
+        the vote table for the SHADOW weights from the stored labelled set
+        via the shared ``refresh_vote_table`` pass (bit-identical to the
+        table the trainer would checkpoint for these weights); (2)
+        checkpoint — when the engine has a ``ckpt_dir``, shadow state +
+        new table go through the crash-safe ``Checkpointer`` in the
+        trainer's exact layout, so ``from_checkpoint`` / trainer resume
+        both pick the swap up (two swaps landing on one wave re-save the
+        same step — safe, see ``checkpointer._write``); (3) publish — ONE
+        tuple assignment replaces params + vote table + version, so every
+        later dispatch snapshot sees all of v+1 or none of it. The shadow
+        keeps learning from its own (published-equal) weights; nothing is
+        drained, dropped or duplicated. Returns the new version."""
+        if not self.online_stdp:
+            raise RuntimeError("hot_swap needs online_stdp=True — serve-"
+                               "only engines have no shadow weights")
+        if self._label_set is None:
+            raise RuntimeError(
+                "hot_swap rebuilds the vote table at the new weights and "
+                "needs a labelled set: call fit(images, labels) or "
+                "set_label_data(images, labels) before swapping")
+        # copies: the next online dispatch donates the shadow buffers
+        new_ps = [jnp.array(w) for w in
+                  params_from_tree(self.learn_state["params"], self.cfg)]
+        x, labs = self._label_set
+        vt = refresh_vote_table(
+            self._forward, new_ps, x, labs, self.cfg, self.n_slots)
+        wave = int(self.learn_state["wave"])
+        if self.ckpt is not None:
+            from repro.checkpoint.checkpointer import tnn_config_fingerprint
+
+            self.ckpt.save(
+                wave, dict(self.learn_state, vote_table=vt),
+                extra={"arch": "tnn-mnist",
+                       "config": tnn_config_fingerprint(self.cfg),
+                       "wave": wave, "has_vote": True, "eval_wave": wave,
+                       "accuracy": None},
+                block=block)
+        ps, _, ver = self._published
+        self._published = (new_ps, vt, ver + 1)  # the atomic publish
+        self.swaps += 1
+        self._learn_waves = 0
+        return ver + 1
+
     def step(self) -> int:
         """One LOCK-STEP tick: admit up to ``n_slots`` queued requests, run
         ONE jitted gamma wave for the whole slot batch, block, complete the
@@ -363,6 +621,7 @@ class TNNEngine:
         pipelined path (:meth:`poll`) is the production loop; this is the
         reference the parity tests compare it against."""
         self._require_vote()
+        self._maybe_swap()
         if not self.queue:
             return 0
         admitted = self._admit()
@@ -376,8 +635,12 @@ class TNNEngine:
         device queueing overlap dispatch *i*'s compute. When
         ``superbatch_k > 1`` and the backlog is deeper than one wave, the
         dispatch drains up to ``K x n_slots`` requests as ONE on-device
-        K-wave scan (DESIGN.md §13). Returns requests retired this tick."""
+        K-wave scan (DESIGN.md §13). A due hot swap publishes FIRST, so
+        this tick's dispatch already classifies under the new version
+        while the still-in-flight one retires under its own snapshot.
+        Returns requests retired this tick."""
         self._require_vote()
+        self._maybe_swap()
         nxt = None
         if self.queue:
             if self.superbatch_k > 1 and len(self.queue) > self.n_slots:
@@ -395,51 +658,76 @@ class TNNEngine:
     def run_until_done(self, max_ticks: int = 10_000, *,
                        pipelined: bool = True) -> Dict[int, ClassifyRequest]:
         """Serve until the queue drains. ``pipelined=False`` runs the
-        lock-step reference loop. Hitting ``max_ticks`` with requests still
-        queued raises :class:`ServeTimeout` (after retiring any in-flight
-        wave, whose compute is already paid) instead of silently returning
-        a partial ``done`` dict; the served/unserved split counts THIS
-        call only, so a long-lived engine's earlier batches never inflate
-        it."""
+        lock-step reference loop. Hitting ``max_ticks`` with requests
+        outstanding raises :class:`ServeTimeout` instead of silently
+        returning a partial ``done`` dict. The timeout path never blocks:
+        a wave the double-buffered :meth:`poll` staged but has not retired
+        is counted in the UNSERVED split (``in_flight`` on the exception)
+        rather than drained — the hung dispatch may be exactly why the
+        tick budget ran out — and it stays in flight, so a later
+        ``poll``/``run_until_done`` still retires it: served + unserved
+        covers every submitted uid with nothing lost or double-counted.
+        The split counts THIS call only, so a long-lived engine's earlier
+        batches never inflate it."""
         ticks = 0
         served = 0
         while self.queue or self._inflight is not None:
             if ticks >= max_ticks:
-                served += self._drain_inflight()
-                if self.queue:
-                    raise ServeTimeout(served=served,
-                                       unserved=len(self.queue),
-                                       max_ticks=max_ticks)
-                break
+                in_flight = (sum(len(w) for w in self._inflight[0])
+                             if self._inflight else 0)
+                raise ServeTimeout(served=served,
+                                   unserved=len(self.queue) + in_flight,
+                                   max_ticks=max_ticks,
+                                   in_flight=in_flight)
             served += self.poll() if pipelined else self.step()
             ticks += 1
         return self.done
 
     # -- latency accounting ------------------------------------------------
 
-    def stats(self) -> ServeStats:
-        """Aggregate the serve record so far (DESIGN.md §12)."""
-        served = len(self._lat_ms)
-        wall = ((self._t_last - self._t_first)
-                if self._t_first is not None and self._t_last is not None
-                else 0.0)
-        lat = np.asarray(self._lat_ms, np.float64)
+    @staticmethod
+    def _mk_stats(lat_ms: List[float], waves: int, wall: float,
+                  slots_filled: int, n_slots: int) -> ServeStats:
+        served = len(lat_ms)
+        lat = np.asarray(lat_ms, np.float64)
         return ServeStats(
             requests=served,
-            waves=self.waves_served,
+            waves=waves,
             wall_s=wall,
-            waves_per_s=self.waves_served / wall if wall > 0 else 0.0,
+            waves_per_s=waves / wall if wall > 0 else 0.0,
             images_per_s=served / wall if wall > 0 else 0.0,
             p50_ms=float(np.percentile(lat, 50)) if served else 0.0,
             p95_ms=float(np.percentile(lat, 95)) if served else 0.0,
-            occupancy=(self._slots_filled
-                       / (self.waves_served * self.n_slots))
-            if self.waves_served else 0.0,
+            occupancy=(slots_filled / (waves * n_slots)) if waves else 0.0,
         )
+
+    def stats(self) -> ServeStats:
+        """Aggregate the serve record so far (DESIGN.md §12)."""
+        wall = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        return self._mk_stats(self._lat_ms, self.waves_served, wall,
+                              self._slots_filled, self.n_slots)
+
+    def stats_by_version(self) -> Dict[int, ServeStats]:
+        """The serve record split by published version (DESIGN.md §15):
+        every request retires under the version its dispatch snapshot
+        carried, so each version's requests/waves/latency/occupancy are
+        cleanly separable — the per-version accounting the loadgen A/B
+        probe reads. Per-version ``wall_s`` spans that version's first to
+        last retire."""
+        out: Dict[int, ServeStats] = {}
+        for ver, lat in sorted(self._lat_by_ver.items()):
+            first, last = self._span_by_ver[ver]
+            out[ver] = self._mk_stats(
+                lat, self._waves_by_ver.get(ver, 0), last - first,
+                self._slots_by_ver.get(ver, 0), self.n_slots)
+        return out
 
     def reset(self) -> None:
         """Forget served requests and latency samples between load runs —
-        params, vote table and compiled functions stay warm."""
+        params, vote table, version counter, shadow learning state and
+        compiled functions stay warm."""
         self._drain_inflight()
         self.queue.clear()
         self.done = {}
@@ -447,3 +735,7 @@ class TNNEngine:
         self._lat_ms = []
         self._slots_filled = 0
         self._t_first = self._t_last = None
+        self._lat_by_ver = {}
+        self._waves_by_ver = {}
+        self._slots_by_ver = {}
+        self._span_by_ver = {}

@@ -57,17 +57,17 @@ from repro.checkpoint.checkpointer import (
 )
 from repro.core.network import (
     NetworkConfig,
-    build_vote_table,
     classify,
     encode_images,
+    forward_all_padded,
     init_train_state,
     make_superbatch_step,
     make_train_step,
     network_forward,
     params_from_tree,
+    refresh_vote_table,
 )
 from repro.data.mnist_like import digits
-from repro.kernels.padding import pad_batch_rows
 
 
 @dataclasses.dataclass
@@ -236,25 +236,23 @@ class TNNTrainer:
     # -- readout / eval ----------------------------------------------------
 
     def _forward_all(self, params, x: np.ndarray) -> jax.Array:
-        bs = self.tcfg.wave_batch
-        T = self.cfg.layers[0].column.wave.T
-        outs = []
-        for off in range(0, x.shape[0], bs):
-            chunk = x[off:off + bs]
-            k = chunk.shape[0]
-            # ragged tail -> the SAME no-op padding serving uses
-            chunk = pad_batch_rows(jnp.asarray(chunk), bs, T)
-            outs.append(self._forward(params, chunk)[:k])
-        return jnp.concatenate(outs, axis=0)
+        # ragged tail -> the SAME no-op padding serving uses
+        return forward_all_padded(
+            self._forward, params, x, self.tcfg.wave_batch,
+            self.cfg.layers[0].column.wave.T)
 
     def evaluate(self) -> float:
         """Labelled pass over the train set -> vote table; score held-out
-        accuracy with the soft site vote (the paper's readout, §1)."""
+        accuracy with the soft site vote (the paper's readout, §1). The
+        refresh is the shared ``core.network.refresh_vote_table`` path —
+        the one the serving engine's online hot swap also runs, so a
+        swap-published readout matches the trainer's bit for bit
+        (DESIGN.md §15)."""
         T = self.cfg.layers[-1].column.wave.T
         params = params_from_tree(self.state["params"], self.cfg)
-        z_train = self._forward_all(params, self.stream.x)
-        self.vote_table = build_vote_table(
-            z_train, jnp.asarray(self.stream.labels), self.cfg.n_classes, T)
+        self.vote_table = refresh_vote_table(
+            self._forward, params, self.stream.x, self.stream.labels,
+            self.cfg, self.tcfg.wave_batch)
         self.has_vote = True
         z_eval = self._forward_all(params, self.eval_stream.x)
         preds = np.asarray(classify(z_eval, self.vote_table, T, soft=True))

@@ -43,6 +43,37 @@ def test_checkpoint_async_and_wait(tmp_path):
     assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
 
 
+def test_checkpoint_resave_same_step_atomic(tmp_path):
+    """Re-saving an EXISTING step (a trainer re-checkpointing its resume
+    point, two online-serve hot swaps landing on one wave) must replace it
+    with the new data and stay crash-atomic: the live dir is renamed aside
+    and the fresh one renamed in (checkpointer._write), never deleted
+    before its replacement is visible. The pre-fix behaviour rmtree'd the
+    live step first, so a crash between delete and rename destroyed the
+    step with no replacement."""
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=False)
+    ck.save(5, _state(1.0), extra={"gen": 1})
+    ck.save(5, _state(2.0), extra={"gen": 2})  # re-save, new data
+    assert ck.all_steps() == [5]  # one step, not a duplicate
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _state())
+    restored, extra = ck.restore(5, abstract)
+    assert extra["gen"] == 2  # the RE-save won
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.full((4, 4), 2.0))
+    # no working debris: neither the temp dir nor the moved-aside old step
+    leftovers = [n for n in os.listdir(tmp_path)
+                 if n.endswith(".tmp") or n.endswith(".old")]
+    assert leftovers == []
+    # a stale .old from a crashed earlier re-save is cleaned on the next
+    # save of that step and never counts as a step
+    os.makedirs(tmp_path / "step_00000005.old")
+    assert ck.all_steps() == [5]
+    ck.save(5, _state(3.0), extra={"gen": 3})
+    assert not (tmp_path / "step_00000005.old").exists()
+    assert ck.restore(5, abstract)[1]["gen"] == 3
+
+
 def test_checkpoint_shape_mismatch_rejected(tmp_path):
     ck = Checkpointer(str(tmp_path), async_save=False)
     ck.save(1, _state())

@@ -1,0 +1,376 @@
+"""Learn while serving (DESIGN.md §15): online STDP on live traffic is
+bit-exact with the trainer on the same volley stream (per backend, packed
+and legacy layouts, superbatched, and under a 4-device shard_map), hot
+swaps publish atomically with zero lost/duplicated requests, swap
+checkpoints interoperate with ``from_checkpoint``, and the per-version
+accounting (ServeStats + the loadgen A/B probe) splits cleanly."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tnn_mnist import crop_field, launcher_network_config
+from repro.core import (
+    classify,
+    init_train_state,
+    make_train_step,
+    network_forward,
+    params_from_tree,
+)
+from repro.data.mnist_like import digits
+from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+from repro.train.tnn_trainer import WaveStream
+
+SEED = int(os.environ.get("PROPTEST_SEED", "0"))
+SITES = 4  # tiny perfect-square geometry: 7x7 field
+SLOTS = 4
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _loadgen():
+    tools = os.path.join(ROOT, "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    import loadgen
+    return loadgen
+
+
+def _seed_engine(cfg, online=True, swap_every=0, superbatch_k=1,
+                 ckpt_dir=None, impl=None):
+    """An online engine whose shadow state IS ``init_train_state(SEED)`` —
+    the same starting point a ``TNNTrainConfig(seed=SEED)`` trainer has."""
+    st0 = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    params = params_from_tree(st0["params"], cfg)
+    return TNNEngine(cfg, params, n_slots=SLOTS,
+                     impl=impl or cfg.layers[0].column.impl,
+                     superbatch_k=superbatch_k, online_stdp=online,
+                     swap_every=swap_every, seed=SEED, ckpt_dir=ckpt_dir)
+
+
+def _submit_stream(eng, stream, n_waves):
+    """Enqueue the trainer's exact volley stream: FIFO admission slices the
+    uid sequence into precisely ``stream.batch_at(0..n_waves-1)``."""
+    for uid in range(n_waves * stream.wave_batch):
+        eng.submit(ClassifyRequest(uid=uid, image=stream.images[uid]))
+
+
+def _trainer_reference(cfg, stream, n_waves):
+    """N manual trainer steps (``make_train_step`` — the real trainer's
+    step_fn) over the same stream, from the same seed."""
+    step_fn = make_train_step(cfg)
+    state = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    for w in range(n_waves):
+        state, _ = step_fn(state, jnp.asarray(stream.batch_at(w)))
+    return state
+
+
+def _assert_states_equal(got, want):
+    assert int(got["wave"]) == int(want["wave"])
+    np.testing.assert_array_equal(np.asarray(got["rng"]),
+                                  np.asarray(want["rng"]))
+    for name in want["params"]:
+        np.testing.assert_array_equal(np.asarray(got["params"][name]),
+                                      np.asarray(want["params"][name]),
+                                      err_msg=name)
+
+
+# -- tentpole: online-served learning == the trainer, bit for bit -----------
+
+
+@pytest.mark.parametrize("impl,packed", [
+    ("direct", True), ("pallas", True), ("fused", True), ("fused", False),
+])
+def test_online_serving_matches_trainer(impl, packed):
+    """N waves served with online_stdp leave the shadow state BIT-IDENTICAL
+    to N TNNTrainer steps on the same volley stream — per backend, packed
+    and legacy data planes — while every request still classifies under
+    the PUBLISHED v0 weights (swap_every=0: nothing ever swaps)."""
+    n_waves = 4
+    cfg = launcher_network_config(SITES, depth=2, impl=impl, packed=packed)
+    stream = WaveStream(cfg, n_waves * SLOTS, SLOTS, seed=1)
+    imgs, labs = digits(16, seed=1)
+    imgs = crop_field(imgs, SITES)
+
+    eng = _seed_engine(cfg, impl=impl)
+    v0_params = [np.asarray(w) for w in eng.params]
+    eng.fit(imgs, labs)
+    _submit_stream(eng, stream, n_waves)
+    done = eng.run_until_done(pipelined=True)
+    assert sorted(done) == list(range(n_waves * SLOTS))
+    assert eng.swaps == 0 and eng.version == 0
+
+    # the shadow learned the trainer's exact stream
+    _assert_states_equal(eng.learn_state, _trainer_reference(
+        cfg, stream, n_waves))
+    # the published weights never moved, and every request was classified
+    # under THEM (not the shadow): reference classify under v0
+    for w, got in zip(eng.params, v0_params):
+        np.testing.assert_array_equal(np.asarray(w), got)
+    T = cfg.layers[-1].column.wave.T
+    z = network_forward(jnp.asarray(stream.x), eng.params, cfg)[-1]
+    ref = np.asarray(classify(z, eng.vote_table, T, soft=True))
+    for uid in range(n_waves * SLOTS):
+        assert done[uid].result == int(ref[uid])
+        assert done[uid].version == 0
+
+
+def test_online_superbatch_matches_trainer():
+    """The K-wave online drain (one jitted scan per dispatch) learns the
+    same stream: deep backlog + superbatch_k > 1 ends bit-identical to the
+    sequential trainer."""
+    n_waves = 6
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    stream = WaveStream(cfg, n_waves * SLOTS, SLOTS, seed=1)
+    imgs, labs = digits(16, seed=1)
+    imgs = crop_field(imgs, SITES)
+
+    eng = _seed_engine(cfg, superbatch_k=3)
+    eng.fit(imgs, labs)
+    _submit_stream(eng, stream, n_waves)
+    done = eng.run_until_done(pipelined=True)
+    assert sorted(done) == list(range(n_waves * SLOTS))
+    assert eng.waves_served == n_waves
+    _assert_states_equal(eng.learn_state, _trainer_reference(
+        cfg, stream, n_waves))
+
+
+# -- tentpole: hot swap is atomic and loses nothing -------------------------
+
+
+def test_hot_swap_atomic_versioned_classification(tmp_path):
+    """Drive the pipelined loop poll-by-poll across automatic hot swaps and
+    verify the atomicity contract: every retired request's result equals
+    the reference classify under the (params, vote table) pair of the
+    version it records — never a mix — with every uid served exactly once,
+    and the swap checkpoint warm-starts a fresh engine at the published
+    state."""
+    n_waves, swap_every = 6, 2
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    stream = WaveStream(cfg, n_waves * SLOTS, SLOTS, seed=1)
+    imgs, labs = digits(16, seed=1)
+    imgs = crop_field(imgs, SITES)
+
+    eng = _seed_engine(cfg, swap_every=swap_every, ckpt_dir=str(tmp_path))
+    eng.fit(imgs, labs)
+    _submit_stream(eng, stream, n_waves)
+
+    # record every published (params, vote table) the run ever exposes;
+    # the tuples are immutable, so holding references is enough
+    published = {eng.version: eng._published}
+    while eng.pending:
+        eng.poll()
+        published[eng.version] = eng._published
+    done = eng.done
+
+    assert eng.swaps >= 1 and eng.version == eng.swaps
+    assert sorted(done) == list(range(n_waves * SLOTS))  # exactly once each
+    versions_seen = {done[u].version for u in done}
+    assert len(versions_seen) >= 2  # requests really spanned a swap
+
+    # per-version reference: classify the whole test set under each
+    # recorded snapshot; every request must match ITS version's reference
+    T = cfg.layers[-1].column.wave.T
+    x = jnp.asarray(stream.x)
+    ref = {}
+    for ver, (ps, vt, _) in published.items():
+        z = network_forward(x, list(ps), cfg)[-1]
+        ref[ver] = np.asarray(classify(z, vt, T, soft=True))
+    for uid in range(n_waves * SLOTS):
+        r = done[uid]
+        assert r.version in published
+        assert r.result == int(ref[r.version][uid]), (uid, r.version)
+
+    # v1+ is really the learned weights: published != v0 after a swap
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(published[0][0], published[eng.version][0]))
+
+    # the swap checkpointed through the trainer's layout: a fresh engine
+    # warm-starts at exactly the LAST published snapshot
+    eng.ckpt.wait()
+    eng2 = TNNEngine.from_checkpoint(str(tmp_path), cfg, n_slots=SLOTS,
+                                     impl="fused")
+    last_ps, last_vt, _ = published[eng.version]
+    for a, b in zip(eng2.params, last_ps):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(eng2.vote_table),
+                                  np.asarray(last_vt))
+
+
+def test_online_guardrails():
+    cfg = launcher_network_config(SITES, depth=2, impl="direct")
+    st0 = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    params = params_from_tree(st0["params"], cfg)
+    with pytest.raises(ValueError, match="swap_every"):
+        TNNEngine(cfg, params, n_slots=SLOTS, swap_every=2)
+    eng = TNNEngine(cfg, params, n_slots=SLOTS, impl="direct")
+    with pytest.raises(RuntimeError, match="online_stdp"):
+        eng.hot_swap()
+    on = _seed_engine(cfg)
+    with pytest.raises(RuntimeError, match="label"):
+        on.hot_swap()  # no labelled set yet: nothing to re-label with
+
+
+# -- satellite: online continuation of a trained checkpoint -----------------
+
+
+def test_from_checkpoint_online_continues_trainer_stream(tmp_path):
+    """Warm-started online serving CONTINUES the trainer's shadow stream:
+    train + checkpoint, then serve N more waves online — the shadow state
+    equals the trainer having stepped N more waves itself."""
+    from repro.train.tnn_trainer import TNNTrainConfig, TNNTrainer
+
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    tcfg = TNNTrainConfig(wave_batch=SLOTS, train_size=4 * SLOTS,
+                          eval_size=8, ckpt_dir=str(tmp_path),
+                          seed=SEED, log_every=1000)
+    TNNTrainer(cfg, tcfg).run()  # 4 waves + final eval/checkpoint
+
+    n_more = 3
+    eng = TNNEngine.from_checkpoint(
+        str(tmp_path), cfg, n_slots=SLOTS, impl="fused", online_stdp=True)
+    start = int(eng.learn_state["wave"])
+    assert start == 4
+    stream = WaveStream(cfg, tcfg.train_size, SLOTS, seed=tcfg.data_seed)
+    uid = 0
+    for w in range(start, start + n_more):
+        for row in (np.arange(SLOTS) + w * SLOTS) % stream.n:
+            eng.submit(ClassifyRequest(uid=uid, image=stream.images[row]))
+            uid += 1
+    eng.run_until_done(pipelined=True)
+
+    # the trainer resuming from the same checkpoint and stepping n_more
+    # waves lands on the same bits
+    tr = TNNTrainer(cfg, tcfg)
+    assert tr.maybe_resume()
+    for w in range(start, start + n_more):
+        tr.state, _ = tr.step_fn(tr.state, jnp.asarray(stream.batch_at(w)))
+    _assert_states_equal(eng.learn_state, tr.state)
+
+
+# -- satellite: per-version accounting + the loadgen A/B probe --------------
+
+
+def test_stats_by_version_partition():
+    """Per-version ServeStats partition the run: requests/waves/slots sum
+    to the aggregate record, and reset() clears the split."""
+    n_waves, swap_every = 6, 2
+    cfg = launcher_network_config(SITES, depth=2, impl="direct")
+    stream = WaveStream(cfg, n_waves * SLOTS, SLOTS, seed=1)
+    imgs, labs = digits(16, seed=1)
+    eng = _seed_engine(cfg, swap_every=swap_every)
+    eng.fit(crop_field(imgs, SITES), labs)
+    _submit_stream(eng, stream, n_waves)
+    done = eng.run_until_done(pipelined=True)
+
+    agg, by_ver = eng.stats(), eng.stats_by_version()
+    assert eng.swaps >= 1 and len(by_ver) >= 2
+    assert sum(s.requests for s in by_ver.values()) == agg.requests
+    assert sum(s.waves for s in by_ver.values()) == agg.waves
+    for ver, s in by_ver.items():
+        n_req = sum(1 for u in done if done[u].version == ver)
+        assert s.requests == n_req
+        assert 0.0 < s.occupancy <= 1.0
+    eng.reset()
+    assert eng.stats_by_version() == {}
+    assert eng.version >= 1  # the publish counter survives reset
+
+
+def test_loadgen_ab_accuracy_probe():
+    lg = _loadgen()
+
+    # unit: windowing + per-version split on a hand-built done dict
+    def req(uid, result, version, t):
+        r = ClassifyRequest(uid=uid, image=None, result=result,
+                            version=version)
+        r.t_done = t
+        return r
+
+    labels = np.asarray([0, 1, 2, 3])
+    done = {0: req(0, 0, 0, 1.0),   # v0 right
+            1: req(1, 9, 0, 2.0),   # v0 wrong
+            2: req(2, 2, 1, 3.0),   # v1 right
+            3: req(3, 3, 1, 4.0)}   # v1 right
+    assert lg.ab_accuracy(done, labels) == {0: (0.5, 2), 1: (1.0, 2)}
+    # window=2 keeps only the last two retirements (both v1)
+    assert lg.ab_accuracy(done, labels, window=2) == {1: (1.0, 2)}
+
+    # end to end: an online closed-loop run reports accuracy per version
+    eng = lg.build_engine(sites=SITES, slots=SLOTS, impl="direct",
+                          online_stdp=True, swap_every=2, seed=SEED)
+    imgs, labs = lg.labelled_images(SITES, 24)
+    st = lg.run_closed_loop(eng, imgs, 24)
+    assert st.requests == 24 and eng.swaps >= 1
+    ab = lg.ab_accuracy(eng.done, labs)
+    assert len(ab) >= 2
+    assert sum(n for _, n in ab.values()) == 24
+    for acc, n in ab.values():
+        assert 0.0 <= acc <= 1.0 and n > 0
+
+
+# -- meshed: 4-way sharded online serving learns the same bits --------------
+
+
+MESHED_ONLINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    SEED = int(os.environ.get("PROPTEST_SEED", "0"))
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
+    from repro.core import (init_train_state, make_train_step,
+                            params_from_tree)
+    from repro.data.mnist_like import digits
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+    from repro.train.tnn_trainer import WaveStream
+
+    mesh = make_host_mesh()
+    assert mesh.shape["data"] == 4, mesh.shape
+    SITES, SLOTS, N = 4, 8, 3
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    stream = WaveStream(cfg, N * SLOTS, SLOTS, seed=1)
+    st0 = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    params = params_from_tree(st0["params"], cfg)
+
+    eng = TNNEngine(cfg, params, n_slots=SLOTS, impl="fused", mesh=mesh,
+                    online_stdp=True, seed=SEED)
+    imgs, labs = digits(16, seed=1)
+    eng.fit(crop_field(imgs, SITES), labs)
+    for uid in range(N * SLOTS):
+        eng.submit(ClassifyRequest(uid=uid, image=stream.images[uid]))
+    done = eng.run_until_done(pipelined=True)
+    assert sorted(done) == list(range(N * SLOTS))
+
+    # the UNMESHED trainer on the same stream: psum'd counters make the
+    # meshed online shadow device-count invariant
+    step_fn = make_train_step(cfg)
+    state = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    for w in range(N):
+        state, _ = step_fn(state, jnp.asarray(stream.batch_at(w)))
+    assert int(eng.learn_state["wave"]) == int(state["wave"])
+    np.testing.assert_array_equal(np.asarray(eng.learn_state["rng"]),
+                                  np.asarray(state["rng"]))
+    for name in state["params"]:
+        np.testing.assert_array_equal(
+            np.asarray(eng.learn_state["params"][name]),
+            np.asarray(state["params"][name]), err_msg=name)
+    print("meshed online parity OK")
+""")
+
+
+def test_meshed_online_matches_unmeshed_trainer_subprocess():
+    """4-way data-sharded online serving produces bit-identical shadow
+    weights to the unmeshed trainer on the same stream (subprocess, like
+    the other shard_map tests)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", MESHED_ONLINE_SCRIPT], env=env, cwd=ROOT,
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "meshed online parity OK" in r.stdout

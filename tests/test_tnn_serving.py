@@ -151,6 +151,55 @@ def test_pipelined_matches_lockstep_from_checkpoint(tmp_path):
     assert results[0] == results[1]
 
 
+# -- satellite: pre-labelling checkpoints fail fast (or rebuild) ------------
+
+
+def test_from_checkpoint_without_vote_table(tmp_path):
+    """A checkpoint written BEFORE any labelling pass stores the all-zeros
+    vote-table placeholder (extra['has_vote'] falsy). Loading it must fail
+    FAST with the remedy in the message — not serve garbage or crash later
+    in the readout — and passing label_data must rebuild the table at load
+    to exactly what fit() would build."""
+    from repro.checkpoint.checkpointer import (
+        Checkpointer,
+        tnn_config_fingerprint,
+    )
+    from repro.core import params_to_tree
+
+    cfg = launcher_network_config(SITES, depth=2, impl="direct")
+    params = init_network(jax.random.PRNGKey(0), cfg)
+    last = cfg.layers[-1]
+    state = {
+        "params": params_to_tree(params),
+        "rng": jax.random.PRNGKey(7),
+        "wave": jnp.asarray(3, jnp.int32),
+        "vote_table": jnp.zeros(
+            (last.n_cols, last.column.q, cfg.n_classes), jnp.float32),
+    }
+    Checkpointer(str(tmp_path)).save(
+        3, state,
+        extra={"arch": "tnn-mnist", "config": tnn_config_fingerprint(cfg),
+               "wave": 3, "has_vote": False}, block=True)
+
+    with pytest.raises(ValueError, match="has_vote.*label_data"):
+        TNNEngine.from_checkpoint(str(tmp_path), cfg, n_slots=4,
+                                  impl="direct")
+
+    # the remedy: label_data rebuilds the readout at load, identical to
+    # the table a fit() pass on the same labelled set would build
+    imgs, labs = digits(16, seed=1)
+    imgs = crop_field(imgs, SITES)
+    eng = TNNEngine.from_checkpoint(str(tmp_path), cfg, n_slots=4,
+                                    impl="direct", label_data=(imgs, labs))
+    ref = TNNEngine(cfg, params, n_slots=4, impl="direct")
+    ref.fit(imgs, labs)
+    np.testing.assert_array_equal(np.asarray(eng.vote_table),
+                                  np.asarray(ref.vote_table))
+    test_imgs = crop_field(digits(5, seed=5)[0], SITES)
+    _submit_all(eng, test_imgs, 5)
+    assert sorted(eng.run_until_done()) == list(range(5))
+
+
 # -- satellite: the shared no-op padding is bit-inert -----------------------
 
 
@@ -181,22 +230,32 @@ def test_padded_rows_are_bit_inert(impl):
 def test_run_until_done_timeout_raises_and_counts():
     test_imgs = crop_field(digits(6, seed=2)[0], SITES)
 
-    # pipelined: tick 0 dispatches wave 0 (2 requests); at the tick limit
-    # the in-flight wave is retired (its compute is paid), the rest raise
+    # pipelined: ticks 0/1 dispatch waves 0/1 and retire wave 0; at the
+    # tick limit wave 1 is STILL IN FLIGHT — the timeout path must not
+    # block on it (it may be the hang), so it counts in the unserved
+    # split, and served + unserved covers every submitted uid
     eng = _fit_engine(impl="direct", n_slots=2)
     _submit_all(eng, test_imgs, 6)
     with pytest.raises(ServeTimeout) as ei:
-        eng.run_until_done(max_ticks=1)
+        eng.run_until_done(max_ticks=2)
     assert ei.value.served == 2 and ei.value.unserved == 4
-    assert len(eng.done) == 2  # in-flight wave retired, not lost
-    assert len(eng.queue) == 4  # still queued, explicitly accounted
+    assert ei.value.in_flight == 2  # the staged-but-unretired wave
+    assert ei.value.served + ei.value.unserved == 6
+    assert len(eng.done) == 2  # only actually-retired requests are done
+    assert len(eng.queue) == 2  # 2 queued + 2 in flight = 4 unserved
+    assert eng.pending == 4
+    # nothing was lost: continuing the SAME engine retires the in-flight
+    # wave and drains the queue, every uid exactly once
+    done = eng.run_until_done(max_ticks=10)
+    assert sorted(done) == list(range(6))
 
-    # lock-step: two ticks serve 4 of 6
+    # lock-step: two ticks serve 4 of 6, nothing rides in flight
     eng = _fit_engine(impl="direct", n_slots=2)
     _submit_all(eng, test_imgs, 6)
     with pytest.raises(ServeTimeout) as ei:
         eng.run_until_done(max_ticks=2, pipelined=False)
     assert ei.value.served == 4 and ei.value.unserved == 2
+    assert ei.value.in_flight == 0
 
     # enough ticks: no timeout, everything served
     eng = _fit_engine(impl="direct", n_slots=2)
@@ -207,8 +266,9 @@ def test_run_until_done_timeout_raises_and_counts():
     for uid in range(6, 12):
         eng.submit(ClassifyRequest(uid=uid, image=test_imgs[uid - 6]))
     with pytest.raises(ServeTimeout) as ei:
-        eng.run_until_done(max_ticks=1)
+        eng.run_until_done(max_ticks=2)
     assert ei.value.served == 2 and ei.value.unserved == 4
+    assert ei.value.in_flight == 2
 
 
 def test_serving_before_fit_raises_everywhere():

@@ -41,6 +41,11 @@ Three checks, all run by CI next to the tier-1 pytest run:
    checked-in ``benchmarks/tuned_blocks.json`` cache must exist, and the
    README must document the reproducible-benchmarking entry points
    (``run.sh``, the tuner).
+8. **§15 anchors + the online-serving flags.** DESIGN.md §15 (learn while
+   serving) must keep its anchor topics — online mode, swap protocol,
+   version accounting — the ``--online-stdp``/``--swap-every`` flags it
+   documents must exist in ``launch/serve.py``, and the README must show
+   the learn-while-serving quickstart.
 
 Run from the repo root:
 
@@ -286,6 +291,42 @@ def check_section14_packed(root: pathlib.Path) -> list:
     return problems
 
 
+# §15 is the learn-while-serving section; these topics are its contract
+# with core/network.py (make_online_step, refresh_vote_table) +
+# serve/tnn_engine.py (hot_swap, stats_by_version) and must stay.
+SECTION15_ANCHORS = ("online mode", "swap protocol", "version accounting")
+ONLINE_FLAGS = ("--online-stdp", "--swap-every")
+
+
+def check_section15_online(root: pathlib.Path) -> list:
+    """DESIGN.md §15 must exist with its anchor topics; the online-serving
+    flags it documents must exist in ``launch/serve.py``; and the README
+    must show the learn-while-serving quickstart."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§15\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append("DESIGN.md: no §15 section (learn while serving)")
+    else:
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION15_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §15: missing anchor topic {anchor!r}")
+    serve_src = (root / "src" / "repro" / "launch" / "serve.py").read_text()
+    for flag in ONLINE_FLAGS:
+        if f'"{flag}"' not in serve_src:
+            problems.append(
+                f"src/repro/launch/serve.py: missing {flag} flag "
+                f"(DESIGN.md §15 documents it)")
+    if "--online-stdp" not in (root / "README.md").read_text():
+        problems.append(
+            "README.md: never mentions --online-stdp — the §15 learn-"
+            "while-serving quickstart must show it")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -314,9 +355,11 @@ def main() -> int:
     s12_problems = check_section12_serving(root)
     s13_problems = check_section13_superbatch(root)
     s14_problems = check_section14_packed(root)
+    s15_problems = check_section15_online(root)
 
     if (dangling or backend_problems or launcher_problems or s11_problems
-            or s12_problems or s13_problems or s14_problems):
+            or s12_problems or s13_problems or s14_problems
+            or s15_problems):
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -346,6 +389,11 @@ def main() -> int:
                   file=sys.stderr)
             for p in s14_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s15_problems:
+            print("check_docs: §15 / learn-while-serving problems:",
+                  file=sys.stderr)
+            for p in s15_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
@@ -353,7 +401,8 @@ def main() -> int:
           f"ColumnConfig.IMPLS; §11 anchors + {DEEP_FACTORY} factory intact; "
           f"§12 anchors + serving flags + loadgen intact; §13 anchors + "
           f"{SUPERBATCH_FLAG} launcher flags intact; §14 anchors + "
-          f"{PACKED_FLAG}/tuner surface intact")
+          f"{PACKED_FLAG}/tuner surface intact; §15 anchors + online-serving "
+          f"flags intact")
     return 0
 
 

@@ -12,15 +12,26 @@ Drives a :class:`repro.serve.tnn_engine.TNNEngine` the way traffic would:
   are deterministic per seed (reproducible load shapes).
 
 Both modes return the engine's :class:`repro.serve.tnn_engine.ServeStats`.
+
+**Labelled traffic + the A/B accuracy probe** (DESIGN.md §15): with
+``--labelled`` (implied by ``--online-stdp``) every request's ground-truth
+label is known, and after the run :func:`ab_accuracy` splits accuracy by
+the params/vote-table VERSION each request was classified under — so a
+learn-while-serving hot swap is directly observable as accuracy under
+``weights_v`` vs ``weights_v+1`` over a sliding window of recent requests.
+
 Standalone (the quick capacity probe; needs ``PYTHONPATH=src``):
 
     PYTHONPATH=src python tools/loadgen.py --mode closed --requests 64 \
         --impl fused --depth 2 --sites 16 --slots 8
     PYTHONPATH=src python tools/loadgen.py --mode open --rate 200 \
         --duration 2.0 --impl fused
+    PYTHONPATH=src python tools/loadgen.py --mode closed --requests 96 \
+        --online-stdp --swap-every 4 --window 48
 
 ``benchmarks/run.py --serve`` imports this module to produce the
-``bench-serve.json`` rows CI gates against ``benchmarks/baseline-serve.json``.
+``bench-serve.json`` rows CI gates against ``benchmarks/baseline-serve.json``
+(including the ``tnn_online_serve`` learn-while-serving row).
 """
 from __future__ import annotations
 
@@ -53,11 +64,14 @@ def poisson_arrivals(rate_hz: float, duration_s: float,
 
 
 def build_engine(sites: int = 16, slots: int = 8, impl: str = "fused",
-                 depth: int = 2, mesh=None, seed: int = 0):
+                 depth: int = 2, mesh=None, seed: int = 0,
+                 online_stdp: bool = False, swap_every: int = 0):
     """A ready-to-serve engine on the launcher convention: network from
     ``launcher_network_config``, fresh weights, vote table fit on a small
     labelled set — enough readout for load testing (a real deployment
-    warm-starts ``from_checkpoint`` instead)."""
+    warm-starts ``from_checkpoint`` instead). ``online_stdp``/``swap_every``
+    pass straight through to :class:`TNNEngine` for learn-while-serving
+    load tests (DESIGN.md §15)."""
     import jax
 
     from repro.configs.tnn_mnist import crop_field, launcher_network_config
@@ -67,7 +81,9 @@ def build_engine(sites: int = 16, slots: int = 8, impl: str = "fused",
 
     cfg = launcher_network_config(sites, depth=depth, impl=impl)
     eng = TNNEngine(cfg, init_network(jax.random.PRNGKey(seed), cfg),
-                    n_slots=slots, impl=impl, mesh=mesh)
+                    n_slots=slots, impl=impl, mesh=mesh,
+                    online_stdp=online_stdp, swap_every=swap_every,
+                    seed=seed)
     imgs, labs = digits(max(64, 4 * slots), seed=1)
     eng.fit(crop_field(imgs, sites), labs)
     return eng
@@ -79,6 +95,39 @@ def test_images(sites: int, n: int, seed: int = 2) -> np.ndarray:
     from repro.data.mnist_like import digits
 
     return crop_field(digits(n, seed=seed)[0], sites)
+
+
+def labelled_images(sites: int, n: int, seed: int = 2):
+    """``(images, labels)`` — the held-out digits WITH ground truth, for
+    labelled-traffic mode. Request ``uid`` carries image (and so label)
+    ``uid % n``, which is how :func:`ab_accuracy` recovers the truth."""
+    from repro.configs.tnn_mnist import crop_field
+    from repro.data.mnist_like import digits
+
+    imgs, labs = digits(n, seed=seed)
+    return crop_field(imgs, sites), np.asarray(labs)
+
+
+def ab_accuracy(done, labels: np.ndarray, window: int = 0):
+    """Per-version accuracy over the (optionally windowed) retired stream.
+
+    ``done`` is the engine's uid -> ClassifyRequest map; each request is
+    tagged with the params/vote-table ``version`` it was classified under,
+    and its ground truth is ``labels[uid % len(labels)]`` (the
+    :func:`labelled_images` convention). Returns ``{version: (accuracy,
+    n)}`` sorted by version. ``window > 0`` restricts to the last
+    ``window`` retirements (by completion time) — the A/B probe for a hot
+    swap: old and new weights scored on the SAME recent traffic slice.
+    """
+    reqs = sorted(done.values(), key=lambda r: (r.t_done, r.uid))
+    if window:
+        reqs = reqs[-window:]
+    hits: dict = {}
+    for r in reqs:
+        ok = int(r.result == labels[r.uid % len(labels)])
+        n_ok, n = hits.get(r.version, (0, 0))
+        hits[r.version] = (n_ok + ok, n + 1)
+    return {v: (n_ok / n, n) for v, (n_ok, n) in sorted(hits.items())}
 
 
 def run_closed_loop(eng, images: np.ndarray, n_requests: int,
@@ -140,11 +189,32 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lockstep", action="store_true",
                     help="closed loop only: use the blocking reference loop")
+    ap.add_argument("--labelled", action="store_true",
+                    help="labelled traffic: drive held-out digits WITH "
+                         "ground truth and report per-version accuracy "
+                         "after the run (implied by --online-stdp)")
+    ap.add_argument("--online-stdp", action="store_true",
+                    help="learn while serving: every wave also runs the "
+                         "STDP epilogue on a shadow weight version, hot-"
+                         "swapped in on the --swap-every cadence "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--swap-every", type=int, default=16,
+                    help="learning waves between hot swaps in --online-stdp "
+                         "mode (0 = never swap automatically)")
+    ap.add_argument("--window", type=int, default=64,
+                    help="A/B probe window: score per-version accuracy over "
+                         "the last N retired requests (0 = all)")
     args = ap.parse_args()
+    labelled = args.labelled or args.online_stdp
 
     eng = build_engine(sites=args.sites, slots=args.slots, impl=args.impl,
-                       depth=args.depth, seed=args.seed)
-    imgs = test_images(args.sites, max(args.requests, 64))
+                       depth=args.depth, seed=args.seed,
+                       online_stdp=args.online_stdp,
+                       swap_every=args.swap_every if args.online_stdp else 0)
+    if labelled:
+        imgs, labs = labelled_images(args.sites, max(args.requests, 64))
+    else:
+        imgs, labs = test_images(args.sites, max(args.requests, 64)), None
     # warm the jitted paths so the measured run isn't a compile benchmark
     run_closed_loop(eng, imgs, args.slots)
     eng.reset()
@@ -158,6 +228,15 @@ def main() -> None:
         st = run_open_loop(eng, imgs, arrivals)
         print(f"[loadgen open @ {args.rate:.0f} req/s x {args.duration:.1f}s "
               f"({len(arrivals)} arrivals)] {_fmt(st)}")
+    if args.online_stdp:
+        print(f"[loadgen online-stdp] {eng.swaps} hot swap(s), "
+              f"now serving v{eng.version}")
+    if labelled:
+        win = args.window if args.window else len(eng.done)
+        for ver, (acc, n) in ab_accuracy(eng.done, labs,
+                                         window=args.window).items():
+            print(f"[loadgen ab] v{ver}: accuracy {acc:.1%} "
+                  f"({n} of last {win} requests)")
 
 
 if __name__ == "__main__":
