@@ -599,6 +599,88 @@ def tnn_deep_wave_throughput(smoke: bool = False,
         _emit("tnn_deep3_fused_speedup", 0.0, x=round(ratio, 3))
 
 
+def tnn_2d_mesh_throughput(smoke: bool = False, ks: tuple = (4,)) -> None:
+    """2-D mesh factorization sweep (DESIGN.md §16): waves/sec of the fused
+    K-wave superbatch dispatch under every (data, model) factorization of a
+    4-device host — batch rows shard over "data", TNN site/columns over
+    "model" — next to the unfactorized (1, 1) shard_map cell. All four
+    cells compute the SAME bits (the mesh2d property suite asserts it);
+    this bench records what each factorization costs on this host, checks
+    the fused dispatch still holds exactly ONE pallas launch per superbatch
+    under shard_map, and prices each compiled module's collective wire
+    bytes with the same ring model the roofline report uses (the psum'd
+    STDP counters are the all-reduce traffic ``launch/collective_probe.py``
+    itemizes). Emits one gated row per factorization plus the
+    ``tnn_2d_mesh_throughput`` headline (the genuinely-2-D (2, 2) cell),
+    gated against ``benchmarks/baseline-mesh.json``, and one
+    ``tnn_roofline_mesh_*`` cell per factorization so the bench-mesh
+    artifact renders in the roofline report. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI step
+    does); on a smaller host it prints a skip note and emits nothing.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core import init_train_state, make_superbatch_step
+    from repro.launch.mesh import make_host_mesh_2d
+    from repro.roofline.analysis import CPU_HOST, from_compiled
+    from repro.utils.tracing import pallas_launch_count
+
+    n_dev = len(jax.devices())
+    if n_dev < 4:
+        print(f"\n(2-D mesh bench needs 4 host devices, have {n_dev}; set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return
+    sites = int(os.environ.get("TNN_BENCH_SITES", "16"))
+    B, K = 8, max(ks)
+    theta1, theta2 = default_thetas(sites)
+    cfg = network_config(sites=sites, theta1=theta1, theta2=theta2,
+                         impl="fused")
+    T = cfg.layers[0].column.wave.T
+    synapses = sum(l.n_cols * l.column.p * l.column.q for l in cfg.layers)
+    print(f"\n== 2-D mesh factorization sweep ({sites}+{sites} columns, "
+          f"batch {B}, K={K}, fused, {n_dev} host devices) ==")
+    wps: Dict[tuple, float] = {}
+    for (d, m) in ((1, 1), (4, 1), (2, 2), (1, 4)):
+        mesh = make_host_mesh_2d(d, m)
+        step = make_superbatch_step(cfg, mesh, donate=False)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        x_k = jax.random.randint(
+            jax.random.PRNGKey(1), (K, B, sites, cfg.layers[0].column.p),
+            0, T + 1, dtype=jnp.uint8)
+        launches = pallas_launch_count(step, state, x_k)
+        assert launches == 1, (
+            f"fused superbatch on mesh {d}x{m} traced {launches} pallas "
+            f"launches, want 1 (the scan body holds one)")
+        comp = step.lower(state, x_k).compile()
+        roof = from_compiled(comp, 2.0 * K * B * synapses,
+                             default_group=d * m, profile=CPU_HOST)
+        us = _timeit_min(lambda: jax.block_until_ready(step(state, x_k)[1]),
+                         n=5 if smoke else 8)
+        wps[(d, m)] = K * 1e6 / us
+        coll_kb = roof.collective_bytes / 1e3
+        print(f"mesh {d}x{m}: {us/1e3:9.1f} ms/dispatch = "
+              f"{wps[(d, m)]:8.2f} waves/s  [{launches} pallas launch, "
+              f"{coll_kb:8.1f} KB collective wire]")
+        _emit(f"tnn_2d_mesh_{d}x{m}", us,
+              waves_per_s=round(wps[(d, m)], 3), launches=launches,
+              collective_kb=round(coll_kb, 3))
+        bound_us = roof.t_bound * 1e6
+        _emit(f"tnn_roofline_mesh_{d}x{m}", us,
+              bound_us=round(bound_us, 3),
+              frac_of_bound=round(bound_us / max(us, 1e-9), 4),
+              bottleneck=roof.bottleneck,
+              useful=round(roof.useful_flop_fraction, 4),
+              hlo_mb=round(roof.bytes_accessed / 1e6, 3),
+              profile=CPU_HOST.name, for_row=f"tnn_2d_mesh_{d}x{m}")
+    us_headline = K * 1e6 / wps[(2, 2)]
+    _emit("tnn_2d_mesh_throughput", us_headline,
+          waves_per_s=round(wps[(2, 2)], 3), k=K, mesh="2x2")
+    ratio = wps[(4, 1)] / max(wps[(1, 4)], 1e-12)
+    print(f"data-only (4x1) vs model-only (1x4): {ratio:.2f}x")
+    _emit("tnn_2d_mesh_data_vs_model", 0.0, x=round(ratio, 3))
+
+
 def _loadgen():
     """Import tools/loadgen.py (a script dir, not a package)."""
     import sys
@@ -813,6 +895,11 @@ def main() -> None:
                          "(DESIGN.md §12; the CI bench-serve.json "
                          "artifact, gated against "
                          "benchmarks/baseline-serve.json)")
+    ap.add_argument("--mesh2d", action="store_true",
+                    help="run only the 2-D mesh factorization sweep "
+                         "(DESIGN.md §16; needs 4 forced host devices; "
+                         "the CI bench-mesh.json artifact, gated against "
+                         "benchmarks/baseline-mesh.json)")
     args = ap.parse_args()
     impls = (("direct", "pallas", "fused") if args.impl == "all"
              else (args.impl,))
@@ -826,6 +913,8 @@ def main() -> None:
     # row, which is the serving gate that rides in baseline.json.
     if args.deep_only:
         tnn_deep_wave_throughput(smoke=args.smoke, impls=impls)
+    elif args.mesh2d:
+        tnn_2d_mesh_throughput(smoke=args.smoke)
     elif args.serve:
         tnn_serve_throughput(smoke=args.smoke, impls=impls, depths=(2, 3))
         tnn_online_serve_throughput(smoke=args.smoke)

@@ -87,6 +87,14 @@ def restore_tnn(ckpt: "Checkpointer", cfg, step: Optional[int] = None):
     ``cfg`` (foreign LM checkpoints, different sites/thetas) BEFORE loading
     any arrays — resuming would either crash on leaf mismatch or silently
     continue under the wrong dynamics.
+
+    Checkpoints are mesh-factorization-agnostic (DESIGN.md §16): the
+    trainer/engine always materialize the UNSHARDED host tree before
+    saving — ``tnn_abstract_state`` describes global shapes, and the
+    model-axis site padding never leaks into a checkpoint — so state
+    saved under one ``(data, model)`` factorization restores bit-exactly
+    under any other (or unsharded), just as it is ``--superbatch-k``- and
+    ``--packed``-agnostic (``tests/test_mesh2d_properties.py``).
     """
     if step is None:
         step = ckpt.latest_step()

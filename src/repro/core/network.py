@@ -174,9 +174,14 @@ def _fused_stdp_ready(cfg: NetworkConfig) -> bool:
 def network_forward(
     x: jax.Array, params: Sequence[jax.Array], cfg: NetworkConfig
 ) -> List[jax.Array]:
-    """Run all layers; returns per-layer post-WTA spike times."""
+    """Run all layers; returns per-layer post-WTA spike times.
+
+    The site extent is read from ``x`` (not the config): inside a
+    model-sharded ``shard_map`` (DESIGN.md §16) the call sees its LOCAL
+    site slice and the fused plan launches over exactly those columns —
+    unsharded, ``x.shape[1]`` IS the config's site count."""
     if _uses_fused_wave(cfg):
-        plan = _kpad.network_plan(cfg, x.shape[0])
+        plan = _kpad.network_plan(cfg, x.shape[0], n_cols=x.shape[1])
         zs = _ktw.wave_forward(x, tuple(params), plan=plan)
         return [z.astype(SPIKE_DTYPE) for z in zs]
     outs = []
@@ -246,6 +251,8 @@ def network_train_superbatch(
     *,
     axis_name: Optional[str] = None,
     data_shards: int = 1,
+    model_axis: Optional[str] = None,
+    model_shards: int = 1,
 ) -> Tuple[List[jax.Array], List[jax.Array]]:
     """K consecutive learning gamma waves in ONE ``lax.scan``: the STDP-
     updated weights stay on device between waves (the scan carry), each wave
@@ -255,16 +262,19 @@ def network_train_superbatch(
     steps at any depth and on any backend (DESIGN.md §13).
 
     x_k: (K, B, C, p) spike times; keys_k: (K,) stacked PRNG keys. The
-    counters inside each wave keep the shard-additive ``out="net"`` form and
-    psum over ``axis_name`` exactly like the single-wave step, so the
-    sharded training path is untouched. Returns (per-layer z stacks
-    ((K, B, C, q_i) each), final per-layer weights)."""
+    counters inside each wave keep the shard-additive ``out="net"`` form
+    and psum over ``axis_name`` exactly like the single-wave step, and the
+    site axis shards over ``model_axis`` exactly like the single-wave step
+    (DESIGN.md §16) — the 2-D sharded training path is one scan over the
+    2-D sharded wave. Returns (per-layer z stacks ((K, B, C, q_i) each),
+    final per-layer weights)."""
 
     def body(ps, xs):
         x, key = xs
         outs, new_ps = network_train_step(
             x, list(ps), cfg, key,
-            axis_name=axis_name, data_shards=data_shards)
+            axis_name=axis_name, data_shards=data_shards,
+            model_axis=model_axis, model_shards=model_shards)
         return tuple(new_ps), tuple(outs)
 
     new_params, outs = jax.lax.scan(body, tuple(params), (x_k, keys_k))
@@ -287,6 +297,49 @@ def superbatch_keys(rng: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return jax.lax.scan(body, rng, None, length=k)
 
 
+def network_mesh_spec(cfg: NetworkConfig, mesh) -> _kpad.MeshSpec:
+    """THE sharding contract for every step factory and the serving engine
+    (DESIGN.md §16): read the (data, model) factorization off ``mesh``
+    (either axis may be absent; ``None`` = unsharded) and bind it to the
+    config's site count. Model-axis sharding slices the column fabric, so
+    it requires one site count across the cascade — heterogeneous-site
+    networks must keep the model axis at 1."""
+    spec = _kpad.MeshSpec.from_mesh(mesh, cfg.layers[0].n_cols)
+    if spec.n_model > 1:
+        cols = {l.n_cols for l in cfg.layers}
+        if len(cols) != 1:
+            raise ValueError(
+                f"model-axis sharding slices the site/column axis and needs "
+                f"one site count across the cascade, got {sorted(cols)} — "
+                f"serve heterogeneous-site networks with model=1")
+    return spec
+
+
+def _site_pad_wrap(inner, spec: _kpad.MeshSpec, T: int, *, x_axis: int,
+                   n_leading_replicated: int = 0):
+    """Wrap a shard_map'd step whose site extent must divide the model
+    axis: pad the site axes of every input with the no-op encodings
+    (spikes = ``T``, weights = 0) OUTSIDE the shard_map but INSIDE the
+    jit, and slice the pad sites back off every output — pad sites start
+    no ramps, win no WTA and fire no STDP case, so their weights stay 0
+    and the pad/slice is bit-lossless (DESIGN.md §16). ``inner`` takes
+    ``n_leading_replicated`` serve-params args, then (state, x); it
+    returns (state, z). Only built when ``spec.site_pad > 0`` — the
+    divisible case keeps the bare shard_map (and its donation)."""
+
+    def step(*args):
+        serve, (state, x) = args[:n_leading_replicated], args[-2:]
+        serve = tuple(spec.pad_weights(list(ps)) for ps in serve)
+        state = dict(state, params=spec.pad_params_tree(state["params"]))
+        x = spec.pad_spike_sites(x, T, axis=x_axis)
+        new_state, z = inner(*serve, state, x)
+        new_state = dict(new_state,
+                         params=spec.slice_params_tree(new_state["params"]))
+        return new_state, spec.slice_sites(z, axis=x_axis)
+
+    return step
+
+
 def make_superbatch_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
     """Build the jitted K-wave production train step:
     ``(state, x_k) -> (state, z_k)`` — the superbatch form of
@@ -302,25 +355,29 @@ def make_superbatch_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
     another), and the wave counter advances by K. ``z_k`` stacks the last
     layer's post-WTA spike times per wave ((K, B, C, q)).
 
-    With a ``mesh`` the per-wave batch axis (axis 1) is shard_map-sharded
-    over "data" and the counters psum inside the scan body — same bits as
-    the unsharded superbatch and as K sequential sharded steps.
+    With a ``mesh`` the per-wave batch axis (axis 1) shards over "data"
+    and the site axis (axis 2) over "model" per :func:`network_mesh_spec`,
+    with the counters psum'd inside the scan body — same bits as the
+    unsharded superbatch and as K sequential sharded steps under ANY
+    (data, model) factorization (DESIGN.md §16).
     """
     for l in cfg.layers:
         if l.column.stdp.batch_reduce != "sum":
             raise ValueError("make_superbatch_step requires "
                              "batch_reduce='sum'")
 
-    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+    spec = network_mesh_spec(cfg, mesh)
 
     def step(state, x_k):
         k = x_k.shape[0]
-        params = params_from_tree(state["params"], cfg)
+        params = params_from_tree(
+            state["params"], cfg,
+            n_cols=x_k.shape[2] if spec.n_model > 1 else None)
         key, subs = superbatch_keys(state["rng"], k)
         outs, new_params = network_train_superbatch(
             x_k, params, cfg, subs,
-            axis_name=None if mesh is None else "data",
-            data_shards=n_data,
+            axis_name=spec.data_axis, data_shards=spec.n_data,
+            model_axis=spec.model_axis, model_shards=spec.n_model,
         )
         new_state = {
             "params": params_to_tree(new_params),
@@ -330,16 +387,18 @@ def make_superbatch_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
         return new_state, outs[-1]
 
     if mesh is not None:
-        from jax.sharding import PartitionSpec as P
-
         from repro.sharding import shard_map
 
         step = shard_map(
             step, mesh=mesh,
-            in_specs=(P(), P(None, "data")),
-            out_specs=(P(), P(None, "data")),
+            in_specs=(spec.state_spec(), spec.x_spec(leading=1)),
+            out_specs=(spec.state_spec(), spec.x_spec(leading=1)),
         )
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+        if spec.site_pad:
+            step = _site_pad_wrap(step, spec, cfg.layers[0].column.wave.T,
+                                  x_axis=2)
+    donate_args = (0,) if donate and not spec.site_pad else ()
+    return jax.jit(step, donate_argnums=donate_args)
 
 
 # ---------------------------------------------------------------------------
@@ -354,16 +413,22 @@ def params_to_tree(params: Sequence[jax.Array]) -> Dict[str, jax.Array]:
 
 
 def params_from_tree(
-    tree: Dict[str, jax.Array], cfg: NetworkConfig
+    tree: Dict[str, jax.Array], cfg: NetworkConfig,
+    n_cols: Optional[int] = None,
 ) -> List[jax.Array]:
-    """Inverse of :func:`params_to_tree`; validates per-layer shapes."""
+    """Inverse of :func:`params_to_tree`; validates per-layer shapes.
+    ``n_cols`` overrides the expected site extent — inside a model-sharded
+    ``shard_map`` (DESIGN.md §16) each shard holds a LOCAL site slice of
+    every layer's weights, so the leading axis is smaller than the
+    config's global count."""
     params = []
     for i, lcfg in enumerate(cfg.layers):
         key = f"layer_{i:02d}"
         if key not in tree:
             raise KeyError(f"params tree missing {key} (have {sorted(tree)})")
         w = tree[key]
-        want = (lcfg.n_cols, lcfg.column.p, lcfg.column.q)
+        want = (lcfg.n_cols if n_cols is None else n_cols,
+                lcfg.column.p, lcfg.column.q)
         if tuple(w.shape) != want:
             raise ValueError(f"{key}: shape {tuple(w.shape)} != {want}")
         params.append(w)
@@ -378,35 +443,56 @@ def network_train_step(
     *,
     axis_name: Optional[str] = None,
     data_shards: int = 1,
+    model_axis: Optional[str] = None,
+    model_shards: int = 1,
 ) -> Tuple[List[jax.Array], List[jax.Array]]:
     """One gamma wave of online STDP — the counter-form of
-    :func:`network_train_wave`, bit-exact with it and data-shardable.
+    :func:`network_train_wave`, bit-exact with it and 2-D shardable.
 
-    x: (b, C, p) spike times — the local batch rows when running inside a
-    ``shard_map`` over ``axis_name``, the full batch otherwise. Every shard
-    draws the STDP uniforms for the GLOBAL batch (``b * data_shards`` rows)
-    from the same per-layer/per-column key split and slices out its own
-    rows, computes local net counters, and psums them over ``axis_name``
-    before one saturating apply — so the trained weights are invariant to
-    the data-sharding layout (1 device or many give identical bits;
-    DESIGN.md §9). Requires ``STDPConfig.batch_reduce == "sum"``.
+    x: (b, C_loc, p) spike times — the local batch rows / site columns when
+    running inside a ``shard_map`` over ``axis_name`` (batch over "data")
+    and/or ``model_axis`` (sites over "model"), the full extents otherwise.
+    Every shard draws the STDP uniforms for the GLOBAL batch
+    (``b * data_shards`` rows) and GLOBAL site count from the same
+    per-layer/per-column key split, pads the site axis with the no-op 1.0
+    up to the model-axis multiple, and slices out its own sites and rows —
+    then computes local net counters and psums them over ``axis_name``
+    before one saturating apply. The cascade is same-site (WTA is
+    column-local, layer i feeds layer i+1 AT THE SAME SITE), so the model
+    axis needs no collective at all: per-site counters are complete on
+    their shard, and only the batch-partial sums cross the wire. The
+    trained weights are therefore invariant to the full (data, model)
+    factorization (DESIGN.md §9, §16). Requires
+    ``STDPConfig.batch_reduce == "sum"``.
 
     Returns (per-layer post-WTA spike times, new per-layer weights).
     """
     b_local = x.shape[0]
     B = b_local * data_shards
+    c_local = x.shape[1]
     row0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * b_local
+    site0 = (0 if model_axis is None
+             else jax.lax.axis_index(model_axis) * c_local)
+
+    def shard_u(u):
+        # u: (C_global, 2, B, p, q) global draws -> this shard's
+        # (c_local, 2, b_local, p, q) slice. Site axis first (pad with the
+        # no-op 1.0 so the model multiple divides), then batch rows.
+        if model_axis is not None:
+            u = _kpad.pad_uniform_sites(u, c_local * model_shards)
+            u = jax.lax.dynamic_slice_in_dim(u, site0, c_local, axis=0)
+        return jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2)
+
     keys = jax.random.split(rng, len(cfg.layers))
     if _uses_fused_wave(cfg) and _fused_stdp_ready(cfg):
         # One megakernel launch for the whole wave, any depth (DESIGN.md
-        # §10, §11). The uniforms are still drawn for the GLOBAL batch from
-        # the same per-layer/per-column key split and sliced per shard, and
-        # the counters still psum — bits identical to the per-layer path.
-        plan = _kpad.network_plan(cfg, b_local)
-        us = []
-        for lcfg, k in zip(cfg.layers, keys):
-            u = layer_uniforms(k, lcfg, B)
-            us.append(jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2))
+        # §10, §11), gridded over the LOCAL site slice. The uniforms are
+        # still drawn for the GLOBAL extents from the same per-layer/
+        # per-column key split and sliced per shard, and the counters
+        # still psum — bits identical to the per-layer path.
+        plan = _kpad.network_plan(cfg, b_local, n_cols=c_local)
+        us = [shard_u(layer_uniforms(k, lcfg, B))
+              for lcfg, k in zip(cfg.layers, keys)]
         zs, nets = _ktw.wave_train(
             x, tuple(params), tuple((u[:, 0], u[:, 1]) for u in us),
             plan=plan)
@@ -420,8 +506,7 @@ def network_train_step(
     new_params, outs = [], []
     for w, lcfg, k in zip(params, cfg.layers, keys):
         z = layer_forward(x, w, lcfg)
-        u = layer_uniforms(k, lcfg, B)  # (C, 2, B, p, q) — global draws
-        u = jax.lax.dynamic_slice_in_dim(u, row0, b_local, axis=2)
+        u = shard_u(layer_uniforms(k, lcfg, B))  # global draws, local slice
         net = layer_stdp_net(x, z, w, lcfg, u[:, 0], u[:, 1])
         if axis_name is not None:
             net = jax.lax.psum(net, axis_name)
@@ -442,24 +527,29 @@ def make_train_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
     weight update happens in place on device — callers must keep only the
     returned state (the trainer checkpoints by materializing to host first).
 
-    With a ``mesh`` (needs a "data" axis) the batch axis is shard_map-
-    sharded over "data" exactly like ``TNNEngine``: params/rng replicated,
-    x and z on the data axis, STDP counters psum'd — same bits as the
-    unsharded step (DESIGN.md §9). B must divide by the data axis size.
+    With a ``mesh`` the batch axis shards over "data" and the site axis
+    over "model" per :func:`network_mesh_spec` (DESIGN.md §9, §16):
+    params site-sharded over "model" (rng/wave replicated), x and z on
+    (data, model), STDP counters psum'd over "data" — same bits as the
+    unsharded step under ANY (data, model) factorization. B must divide
+    by the data axis size; a site count that does not divide the model
+    axis is padded with no-op sites outside the shard_map.
     """
     for l in cfg.layers:
         if l.column.stdp.batch_reduce != "sum":
             raise ValueError("make_train_step requires batch_reduce='sum'")
 
-    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+    spec = network_mesh_spec(cfg, mesh)
 
     def step(state, x):
-        params = params_from_tree(state["params"], cfg)
+        params = params_from_tree(
+            state["params"], cfg,
+            n_cols=x.shape[1] if spec.n_model > 1 else None)
         key, sub = jax.random.split(state["rng"])
         outs, new_params = network_train_step(
             x, params, cfg, sub,
-            axis_name=None if mesh is None else "data",
-            data_shards=n_data,
+            axis_name=spec.data_axis, data_shards=spec.n_data,
+            model_axis=spec.model_axis, model_shards=spec.n_model,
         )
         new_state = {
             "params": params_to_tree(new_params),
@@ -469,16 +559,18 @@ def make_train_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
         return new_state, outs[-1]
 
     if mesh is not None:
-        from jax.sharding import PartitionSpec as P
-
         from repro.sharding import shard_map
 
         step = shard_map(
             step, mesh=mesh,
-            in_specs=(P(), P("data")),
-            out_specs=(P(), P("data")),
+            in_specs=(spec.state_spec(), spec.x_spec()),
+            out_specs=(spec.state_spec(), spec.x_spec()),
         )
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+        if spec.site_pad:
+            step = _site_pad_wrap(step, spec, cfg.layers[0].column.wave.T,
+                                  x_axis=1)
+    donate_args = (0,) if donate and not spec.site_pad else ()
+    return jax.jit(step, donate_argnums=donate_args)
 
 
 def init_train_state(rng: jax.Array, cfg: NetworkConfig) -> Dict:
@@ -524,15 +616,17 @@ def make_online_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
         if l.column.stdp.batch_reduce != "sum":
             raise ValueError("make_online_step requires batch_reduce='sum'")
 
-    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+    spec = network_mesh_spec(cfg, mesh)
 
     def step(serve_params, state, x):
-        params = params_from_tree(state["params"], cfg)
+        params = params_from_tree(
+            state["params"], cfg,
+            n_cols=x.shape[1] if spec.n_model > 1 else None)
         key, sub = jax.random.split(state["rng"])
         _, new_params = network_train_step(
             x, params, cfg, sub,
-            axis_name=None if mesh is None else "data",
-            data_shards=n_data,
+            axis_name=spec.data_axis, data_shards=spec.n_data,
+            model_axis=spec.model_axis, model_shards=spec.n_model,
         )
         z = network_forward(x, list(serve_params), cfg)[-1]
         new_state = {
@@ -543,16 +637,18 @@ def make_online_step(cfg: NetworkConfig, mesh=None, donate: bool = True):
         return new_state, z
 
     if mesh is not None:
-        from jax.sharding import PartitionSpec as P
-
         from repro.sharding import shard_map
 
         step = shard_map(
             step, mesh=mesh,
-            in_specs=(P(), P(), P("data")),
-            out_specs=(P(), P("data")),
+            in_specs=(spec.params_spec(), spec.state_spec(), spec.x_spec()),
+            out_specs=(spec.state_spec(), spec.x_spec()),
         )
-    return jax.jit(step, donate_argnums=(1,) if donate else ())
+        if spec.site_pad:
+            step = _site_pad_wrap(step, spec, cfg.layers[0].column.wave.T,
+                                  x_axis=1, n_leading_replicated=1)
+    donate_args = (1,) if donate and not spec.site_pad else ()
+    return jax.jit(step, donate_argnums=donate_args)
 
 
 def make_online_superbatch_step(cfg: NetworkConfig, mesh=None,
@@ -570,16 +666,18 @@ def make_online_superbatch_step(cfg: NetworkConfig, mesh=None,
             raise ValueError("make_online_superbatch_step requires "
                              "batch_reduce='sum'")
 
-    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+    spec = network_mesh_spec(cfg, mesh)
 
     def step(serve_params, state, x_k):
         k = x_k.shape[0]
-        params = params_from_tree(state["params"], cfg)
+        params = params_from_tree(
+            state["params"], cfg,
+            n_cols=x_k.shape[2] if spec.n_model > 1 else None)
         key, subs = superbatch_keys(state["rng"], k)
         _, new_params = network_train_superbatch(
             x_k, params, cfg, subs,
-            axis_name=None if mesh is None else "data",
-            data_shards=n_data,
+            axis_name=spec.data_axis, data_shards=spec.n_data,
+            model_axis=spec.model_axis, model_shards=spec.n_model,
         )
         z_k = network_forward_superbatch(x_k, list(serve_params), cfg)[-1]
         new_state = {
@@ -590,16 +688,19 @@ def make_online_superbatch_step(cfg: NetworkConfig, mesh=None,
         return new_state, z_k
 
     if mesh is not None:
-        from jax.sharding import PartitionSpec as P
-
         from repro.sharding import shard_map
 
         step = shard_map(
             step, mesh=mesh,
-            in_specs=(P(), P(), P(None, "data")),
-            out_specs=(P(), P(None, "data")),
+            in_specs=(spec.params_spec(), spec.state_spec(),
+                      spec.x_spec(leading=1)),
+            out_specs=(spec.state_spec(), spec.x_spec(leading=1)),
         )
-    return jax.jit(step, donate_argnums=(1,) if donate else ())
+        if spec.site_pad:
+            step = _site_pad_wrap(step, spec, cfg.layers[0].column.wave.T,
+                                  x_axis=2, n_leading_replicated=1)
+    donate_args = (1,) if donate and not spec.site_pad else ()
+    return jax.jit(step, donate_argnums=donate_args)
 
 
 def forward_all_padded(forward_fn, params, x, batch: int, T: int) -> jax.Array:

@@ -141,6 +141,126 @@ def pad_batch_rows(x: jax.Array, rows: int, T: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# 2-D ("data" x "model") mesh spec: per-shard site geometry (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """The sharding contract every step factory consumes (DESIGN.md §16).
+
+    One frozen record replaces the copy-pasted ``P(), P("data")`` blocks:
+    how many shards each mesh axis holds, which axis names exist on the
+    mesh (a 1-D ``("data",)`` host mesh simply has no model axis), and the
+    per-shard SITE geometry — the logical column count padded up to a
+    model-axis multiple with the SAME no-op encodings :class:`PadPlan`
+    owns (pad spikes = ``T``, pad weights = 0, pad uniforms = 1.0), so a
+    pad site starts no ramps, wins no WTA, and fires no STDP case: its
+    weights stay 0 through any number of waves and slicing it off is
+    lossless. Batch rows shard over "data", sites over "model"; the
+    cascade is same-site, so the model axis needs NO inter-layer
+    collective — only the data-axis counter psum crosses the wire.
+    """
+
+    n_data: int = 1
+    n_model: int = 1
+    n_cols: int = 0                       # logical (global) site count
+    data_axis: Optional[str] = None       # None <=> axis absent from mesh
+    model_axis: Optional[str] = None
+
+    @classmethod
+    def from_mesh(cls, mesh, n_cols: int) -> "MeshSpec":
+        """Read the (data, model) factorization off a ``Mesh`` (either
+        axis may be absent — a legacy 1-D data mesh yields n_model=1);
+        ``mesh=None`` is the unsharded spec."""
+        if mesh is None:
+            return cls(n_cols=n_cols)
+        shape = dict(mesh.shape)
+        return cls(
+            n_data=int(shape.get("data", 1)),
+            n_model=int(shape.get("model", 1)),
+            n_cols=n_cols,
+            data_axis="data" if "data" in shape else None,
+            model_axis="model" if "model" in shape else None,
+        )
+
+    # -- per-shard site geometry ------------------------------------------
+
+    @property
+    def padded_cols(self) -> int:
+        """Site extent padded up to a model-axis multiple."""
+        return pad_to(self.n_cols, self.n_model)
+
+    @property
+    def local_cols(self) -> int:
+        """Sites per model shard."""
+        return self.padded_cols // self.n_model
+
+    @property
+    def site_pad(self) -> int:
+        """No-op pad sites appended so the model axis divides evenly."""
+        return self.padded_cols - self.n_cols
+
+    # -- PartitionSpecs ----------------------------------------------------
+
+    def x_spec(self, leading: int = 0):
+        """Spec for a spike/volley array shaped (``leading`` wave axes,
+        batch, sites, ...): batch over "data", sites over "model"."""
+        from jax.sharding import PartitionSpec as P
+
+        return P(*(None,) * leading, self.data_axis, self.model_axis)
+
+    def params_spec(self):
+        """Prefix spec for a per-layer weight pytree ((sites, p, q) leaves):
+        the leading site axis shards over "model", the rest replicate."""
+        from jax.sharding import PartitionSpec as P
+
+        return P(self.model_axis) if self.model_axis else P()
+
+    def state_spec(self):
+        """Prefix spec for the training-state pytree: params site-sharded
+        over "model", the rng key and wave counter replicated."""
+        from jax.sharding import PartitionSpec as P
+
+        return {"params": self.params_spec(), "rng": P(), "wave": P()}
+
+    def replicated(self):
+        from jax.sharding import PartitionSpec as P
+
+        return P()
+
+    # -- no-op site padding / slicing (outside shard_map, inside jit) ------
+
+    def pad_spike_sites(self, x: jax.Array, T: int, *, axis: int) -> jax.Array:
+        """Pad the site axis of encoded spikes with ``T`` ("no spike")."""
+        return _pad_axis(x, axis, self.site_pad, T)
+
+    def slice_sites(self, arr: jax.Array, *, axis: int) -> jax.Array:
+        """Drop the pad sites again (inverse of the pad_* helpers)."""
+        if not self.site_pad:
+            return arr
+        return jax.lax.slice_in_dim(arr, 0, self.n_cols, axis=axis)
+
+    def pad_weights(self, params) -> list:
+        """Pad every layer's site axis (axis 0) with 0-weight no-op sites."""
+        return [_pad_axis(w, 0, self.site_pad, 0) for w in params]
+
+    def pad_params_tree(self, tree: dict) -> dict:
+        return {k: _pad_axis(w, 0, self.site_pad, 0) for k, w in tree.items()}
+
+    def slice_params_tree(self, tree: dict) -> dict:
+        return {k: self.slice_sites(w, axis=0) for k, w in tree.items()}
+
+
+def pad_uniform_sites(u: jax.Array, padded_cols: int) -> jax.Array:
+    """Pad the leading site axis of per-layer STDP uniforms up to
+    ``padded_cols`` with the no-op 1.0 (``u < p`` never fires), so pad
+    sites draw no stochastic update and every real site keeps the exact
+    global-draw value regardless of the model factorization."""
+    return _pad_axis(u, 0, padded_cols - u.shape[0], 1.0)
+
+
+# ---------------------------------------------------------------------------
 # Network-level plan for the fused wave executor (DESIGN.md §10, §11)
 # ---------------------------------------------------------------------------
 
@@ -213,24 +333,28 @@ def fused_wave_capable(cfg) -> bool:
     return True
 
 
-def plan_geometry_key(cfg, batch: int) -> str:
+def plan_geometry_key(cfg, batch: int, n_cols: Optional[int] = None) -> str:
     """Stable string naming a fused-wave launch geometry — the lookup key
     of the autotuner's block cache (``benchmarks/tuned_blocks.json``,
     DESIGN.md §14). Deliberately covers ONLY what changes the launch shape
     (sites, per-layer extents, T, batch, packed IO), not thetas/STDP rates:
     the same silicon geometry at different hyperparameters reuses one tuned
-    entry."""
+    entry. ``n_cols`` overrides the config's site count — the model-sharded
+    step launches over its LOCAL site slice (DESIGN.md §16), which is a
+    different grid and therefore a different tuning key."""
     first = cfg.layers[0]
+    C = first.n_cols if n_cols is None else n_cols
     ps = "x".join(str(l.column.p) for l in cfg.layers)
     qs = "x".join(str(l.column.q) for l in cfg.layers)
     packed = int(bool(getattr(cfg, "packed", False)))
-    return (f"C{first.n_cols}_p{ps}_q{qs}_T{first.column.wave.T}"
+    return (f"C{C}_p{ps}_q{qs}_T{first.column.wave.T}"
             f"_B{batch}_packed{packed}")
 
 
 @functools.lru_cache(maxsize=64)
 def network_plan(cfg, batch: int, block_b: Optional[int] = None,
-                 interpret: Optional[bool] = None) -> NetworkPlan:
+                 interpret: Optional[bool] = None,
+                 n_cols: Optional[int] = None) -> NetworkPlan:
     """Compute (once per (config, batch)) the fused wave's launch plan.
 
     ``cfg`` is a frozen ``NetworkConfig`` — hashable, so the cache key is
@@ -241,7 +365,14 @@ def network_plan(cfg, batch: int, block_b: Optional[int] = None,
     block cache for this exact geometry (``repro.kernels.autotune``,
     DESIGN.md §14) and falls back to the static defaults (block_b=64,
     8-aligned p1) when the geometry has no tuned entry; an explicit
-    ``block_b`` bypasses the cache."""
+    ``block_b`` bypasses the cache.
+
+    ``n_cols`` overrides the config's site count with the caller's LOCAL
+    site extent — how a model-sharded step (DESIGN.md §16) launches the
+    megakernel over just its slice of the column fabric: the grid's site
+    dimension comes from the plan, every per-site constant is site-
+    invariant, and sites never interact inside a wave, so a local plan is
+    the global plan restricted to the shard's rows."""
     if not fused_wave_capable(cfg):
         l_desc = [(l.n_cols, l.column.p, l.column.q) for l in cfg.layers]
         raise ValueError(
@@ -262,7 +393,7 @@ def network_plan(cfg, batch: int, block_b: Optional[int] = None,
     if block_b is None:
         from repro.kernels import autotune as _autotune
 
-        tuned = _autotune.lookup(plan_geometry_key(cfg, batch))
+        tuned = _autotune.lookup(plan_geometry_key(cfg, batch, n_cols))
         if tuned is not None:
             block_b, p_align = tuned
         else:
@@ -271,7 +402,7 @@ def network_plan(cfg, batch: int, block_b: Optional[int] = None,
                        block_p=MAX_FUSED_P1, p_align=p_align,
                        interpret=interpret)
     return NetworkPlan(
-        n_cols=first.n_cols,
+        n_cols=first.n_cols if n_cols is None else n_cols,
         ps=tuple(l.column.p for l in cfg.layers),
         qs=tuple(l.column.q for l in cfg.layers),
         thetas=tuple(l.column.theta for l in cfg.layers),

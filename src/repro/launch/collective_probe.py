@@ -1,36 +1,119 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Diagnostic: top collective instructions (by modelled wire bytes) in one
-cell's unrolled cost compile — the §Perf hypothesis-forming tool."""
+compiled dispatch — the §Perf hypothesis-forming tool.
+
+Two probe targets share the report format:
+
+* ``--arch <lm> --cell <cell>`` (the original): one LM cell's unrolled
+  cost compile on the 256-chip production mesh.
+* ``--arch tnn-mnist --mesh DxM`` (DESIGN.md §16): the fused TNN K-wave
+  superbatch dispatch compiled on a factorized (data, model) host mesh —
+  the psum'd STDP counters and any model-axis traffic show up here as
+  all-reduce wire bytes, next to the same ring-model totals
+  ``repro.roofline.analysis`` feeds the roofline report.
+
+Device-count note: nothing happens at import time (the pre-fix module
+force-set ``XLA_FLAGS`` to 512 host devices the moment anything imported
+it). ``main()`` respects an ambient ``--xla_force_host_platform_device_count``
+— e.g. from ``run.sh``'s ``TNN_HOST_DEVICES`` — and only forces a default
+(512 for the LM production mesh, data*model for the TNN probe) when the
+environment has not already chosen one.
+"""
+from __future__ import annotations
+
 import argparse
-import dataclasses
-import re
+import os
 from collections import defaultdict
 
-import jax
-
-from repro.configs import get_config
-from repro.configs.base import cell_by_name
-from repro.launch.dryrun import build_lowerable, _tuned, _dp_size
-from repro.launch.mesh import make_production_mesh
-from repro.roofline import analysis as RL
-from repro.sharding import partition as PT
-from repro.sharding.context import use_partitioning
-from repro.train import train_step as TS
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--cell", required=True)
-    ap.add_argument("--repeat", type=int, default=1)
-    ap.add_argument("--top", type=int, default=15)
-    ap.add_argument("--fsdp", type=int, default=1)
-    ap.add_argument("--seq-parallel", type=int, default=0)
-    args = ap.parse_args()
+def _ensure_host_devices(n: int) -> None:
+    """Force n host devices unless the environment already picked a count
+    (run.sh exports ``XLA_FLAGS`` from ``TNN_HOST_DEVICES``). Must run
+    before the first jax import — which is why every jax/repro import in
+    this module lives inside the probe functions."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{_FORCE_FLAG}={n} {flags}".strip()
+
+
+def _print_top(text: str, default_group: int, top: int, label: str) -> None:
+    """Per-instruction wire-byte breakdown of one HLO module, using the
+    same ring-model formulas as ``roofline.analysis.parse_collectives``."""
+    from repro.roofline import analysis as RL
+
+    per = defaultdict(lambda: [0, 0])
+    for line in text.splitlines():
+        m = RL._INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        size = RL._shape_bytes(dtype, dims)
+        g = RL._group_size(line, default_group)
+        if g <= 1:
+            continue
+        wire = {"all-gather": size * (g - 1) // g,
+                "all-reduce": 2 * size * (g - 1) // g,
+                "reduce-scatter": size * (g - 1),
+                "all-to-all": size * (g - 1) // g,
+                "collective-permute": size}[kind]
+        key = f"{kind} {dtype}[{dims}] g={g}"
+        per[key][0] += wire
+        per[key][1] += 1
+    rows = sorted(per.items(), key=lambda kv: -kv[1][0])
+    total = sum(v[0] for v in per.values())
+    print(f"total modelled wire bytes ({label}): {total/1e9:.2f} GB")
+    for k, (b, n) in rows[:top]:
+        print(f"  {b/1e9:8.3f} GB  x{n:<3d} {k}")
+    stats = RL.parse_collectives(text, default_group)
+    kinds = {k: v for k, v in stats.bytes_by_kind.items() if v}
+    print(f"by kind: {kinds or '(no collectives)'}")
+
+
+def probe_tnn(args: argparse.Namespace) -> None:
+    """Compile the fused TNN K-wave superbatch step on a (data, model)
+    host mesh and report its collective wire bytes (DESIGN.md §16)."""
+    from repro.launch.mesh import make_host_mesh_2d, parse_mesh
+
+    data, model = parse_mesh(args.mesh)
+    _ensure_host_devices(data * model)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core import init_train_state, make_superbatch_step
+
+    theta1, theta2 = default_thetas(args.sites)
+    cfg = network_config(sites=args.sites, theta1=theta1, theta2=theta2,
+                         impl=args.impl)
+    mesh = make_host_mesh_2d(data, model)
+    step = make_superbatch_step(cfg, mesh, donate=False)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    x_k = jax.ShapeDtypeStruct(
+        (args.waves, args.batch, args.sites, cfg.layers[0].column.p),
+        jnp.uint8)
+    text = step.lower(state, x_k).compile().as_text()
+    print(f"tnn-mnist {args.sites}+{args.sites} sites, impl={args.impl}, "
+          f"K={args.waves} x batch {args.batch} on mesh {data}x{model}")
+    _print_top(text, data * model, args.top,
+               f"mesh {data}x{model}, K={args.waves}")
+
+
+def probe_lm(args: argparse.Namespace) -> None:
+    _ensure_host_devices(512)
+
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import cell_by_name
+    from repro.launch.dryrun import build_lowerable, _tuned
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding import partition as PT
+    from repro.sharding.context import use_partitioning
+    from repro.train import train_step as TS
 
     mesh = make_production_mesh(multi_pod=False)
     cell = cell_by_name(args.cell)
@@ -50,32 +133,36 @@ def main():
     from repro.models import layers as LYR
     LYR.FLASH_UNROLL = True
     with mesh, use_partitioning(mesh, PT.act_rules(mesh, prof)):
-        comp = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*a).compile()
-    text = comp.as_text()
+        comp = jax.jit(fn, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*a).compile()
+    _print_top(comp.as_text(), 256, args.top, f"repeat={args.repeat}")
 
-    per = defaultdict(lambda: [0, 0])
-    for line in text.splitlines():
-        m = RL._INSTR_RE.search(line)
-        if not m:
-            continue
-        dtype, dims, kind = m.groups()
-        size = RL._shape_bytes(dtype, dims)
-        g = RL._group_size(line, 256)
-        if g <= 1:
-            continue
-        wire = {"all-gather": size * (g - 1) // g,
-                "all-reduce": 2 * size * (g - 1) // g,
-                "reduce-scatter": size * (g - 1),
-                "all-to-all": size * (g - 1) // g,
-                "collective-permute": size}[kind]
-        key = f"{kind} {dtype}[{dims}] g={g}"
-        per[key][0] += wire
-        per[key][1] += 1
-    rows = sorted(per.items(), key=lambda kv: -kv[1][0])
-    total = sum(v[0] for v in per.values())
-    print(f"total modelled wire bytes (repeat={args.repeat}): {total/1e9:.2f} GB")
-    for k, (b, n) in rows[: args.top]:
-        print(f"  {b/1e9:8.3f} GB  x{n:<3d} {k}")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default=None, help="LM cost cell (LM mode)")
+    ap.add_argument("--repeat", type=int, default=1)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--seq-parallel", type=int, default=0)
+    # tnn-mnist probe (DESIGN.md §16)
+    ap.add_argument("--mesh", default="2x2", metavar="DxM",
+                    help="(data, model) factorization for the TNN probe")
+    ap.add_argument("--sites", type=int, default=16)
+    ap.add_argument("--impl", default="fused",
+                    choices=("direct", "matmul", "pallas", "fused"))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--waves", type=int, default=4,
+                    help="superbatch K of the probed dispatch")
+    args = ap.parse_args()
+
+    if args.arch == "tnn-mnist":
+        probe_tnn(args)
+    else:
+        if not args.cell:
+            raise SystemExit("--cell is required for LM probes")
+        probe_lm(args)
 
 
 if __name__ == "__main__":

@@ -42,7 +42,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.launch.mesh import describe, make_host_mesh
+from repro.launch.mesh import (
+    describe, make_host_mesh, make_host_mesh_2d, parse_mesh,
+)
 
 
 def serve_lm(args: argparse.Namespace) -> None:
@@ -92,7 +94,14 @@ def serve_tnn(args: argparse.Namespace) -> None:
     from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
     import jax.numpy as jnp
 
-    mesh = make_host_mesh()
+    if args.mesh:
+        mesh = make_host_mesh_2d(*parse_mesh(args.mesh))
+    else:
+        mesh = make_host_mesh()
+    # --swap-every has a default so the online quickstart is one flag, but
+    # the engine (rightly) refuses a swap cadence with no shadow state —
+    # only forward it when online learning is actually on
+    swap_every = args.swap_every if args.online_stdp else 0
     n_slots = resolve_slots(args.slots, int(mesh.shape.get("data", 1)))
     cfg = launcher_network_config(args.sites, depth=args.depth,
                                   impl=args.impl, packed=args.packed)
@@ -110,7 +119,7 @@ def serve_tnn(args: argparse.Namespace) -> None:
             args.from_ckpt, cfg, n_slots=n_slots, impl=args.impl, mesh=mesh,
             superbatch_k=args.superbatch_k,
             label_data=(lab_imgs, lab_labs),
-            online_stdp=args.online_stdp, swap_every=args.swap_every)
+            online_stdp=args.online_stdp, swap_every=swap_every)
         print(f"warm-started from {args.from_ckpt} at wave "
               f"{int(eng.learn_state['wave']) if eng.learn_state else '-'}"
               if args.online_stdp else
@@ -126,7 +135,7 @@ def serve_tnn(args: argparse.Namespace) -> None:
         eng = TNNEngine(cfg, params, n_slots=n_slots, impl=args.impl,
                         mesh=mesh, superbatch_k=args.superbatch_k,
                         online_stdp=args.online_stdp,
-                        swap_every=args.swap_every)
+                        swap_every=swap_every)
         eng.fit(lab_imgs, lab_labs)
 
     test_imgs, test_labs = digits(args.requests, seed=2)
@@ -174,6 +183,13 @@ def main() -> None:
                     help="execution backend; 'fused' = one Pallas launch "
                          "per gamma wave (DESIGN.md §10)")
     ap.add_argument("--train-waves", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="explicit (data, model) host-mesh factorization "
+                         "for tnn-mnist, e.g. --mesh 2x2: slots shard over "
+                         "'data', TNN sites/columns over 'model' — same "
+                         "per-uid results under any factorization "
+                         "(DESIGN.md §16); default = all local devices on "
+                         "'data'")
     ap.add_argument("--superbatch-k", type=int, default=1,
                     help="max gamma waves one poll dispatch may scan on "
                          "device when the backlog is deeper than --slots: "

@@ -26,7 +26,10 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.data.tokens import TokenStream
-from repro.launch.mesh import make_host_mesh, make_production_mesh, describe
+from repro.launch.mesh import (
+    describe, make_host_mesh, make_host_mesh_2d, make_production_mesh,
+    parse_mesh,
+)
 from repro.models import model as M
 from repro.sharding import partition as PT
 from repro.sharding.context import use_partitioning
@@ -43,7 +46,10 @@ def train_tnn(args: argparse.Namespace) -> None:
     sites = 16 if args.smoke and args.sites == 625 else args.sites
     cfg = launcher_network_config(sites, depth=args.depth, impl=args.impl,
                                   packed=args.packed)
-    mesh = make_host_mesh()
+    if args.mesh:
+        mesh = make_host_mesh_2d(*parse_mesh(args.mesh))
+    else:
+        mesh = make_host_mesh()
     ckpt_dir = args.ckpt_dir or "/tmp/repro_tnn_ckpt"
     tcfg = train_config(
         sites=sites, smoke=args.smoke, epochs=args.epochs,
@@ -101,6 +107,12 @@ def main() -> None:
                          "widening to i32 only inside the kernel; "
                          "--no-packed keeps the legacy i32 layout — "
                          "bit-exact either way (DESIGN.md §14)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="explicit (data, model) host-mesh factorization "
+                         "for tnn-mnist, e.g. --mesh 2x2: batch rows shard "
+                         "over 'data', TNN sites/columns over 'model' — "
+                         "bit-exact under any factorization (DESIGN.md "
+                         "§16); default = all local devices on 'data'")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="waves between vote-table evals (0 = epoch ends)")
     ap.add_argument("--ckpt-every", type=int, default=0,

@@ -35,13 +35,16 @@ lock-step loop:
 
 The forward runs through the network's configured backend — ``"pallas"`` by
 default; ``"fused"`` classifies each wave in ONE megakernel launch — and
-the batch (slot) axis is data-parallel ``shard_map``-sharded over the
-mesh's "data" axis via :mod:`repro.sharding`, so the identical engine
-serves from one CPU device (smoke tests, ``interpret=True``) or a
-production TPU mesh (``launch/serve.py --arch tnn-mnist``). Params and the
-vote table are replicated; only spikes/results travel on the batch axis.
-Encoding is per-image elementwise, so staging it host-side before the
-sharded forward is bit-identical to encoding inside the shard.
+the mesh factorizes 2-D (DESIGN.md §16): the batch (slot) axis
+``shard_map``-shards over the mesh's "data" axis and the site/column axis
+over its "model" axis via :mod:`repro.sharding`, so the identical engine
+serves from one CPU device (smoke tests, ``interpret=True``), a 1-D data
+mesh, or a production ("data", "model") TPU mesh
+(``launch/serve.py --arch tnn-mnist --mesh DxM``). Params are site-sharded
+over "model"; the vote table stays host-side (classify runs on the
+gathered readout); spikes/results travel on (batch, site). Encoding is
+per-image elementwise, so staging it host-side before the sharded forward
+is bit-identical to encoding inside the shard.
 
 The readout is the paper's unsupervised labelling: :meth:`TNNEngine.fit`
 runs one labelled pass to build the per-site vote table (DESIGN.md §1), and
@@ -80,7 +83,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.network import (
     NetworkConfig,
@@ -91,6 +94,7 @@ from repro.core.network import (
     make_online_superbatch_step,
     network_forward,
     network_forward_superbatch,
+    network_mesh_spec,
     params_from_tree,
     params_to_tree,
     refresh_vote_table,
@@ -171,8 +175,9 @@ class TNNEngine:
             megakernel launch via repro.kernels.tnn_wave — at any cascade
             depth, DESIGN.md §10, §11; "direct"/"matmul" are the
             references).
-        mesh: optional ``Mesh`` with a "data" axis for data-parallel
-            sharding of the slot axis; ``None`` serves unsharded.
+        mesh: optional ``Mesh`` — a "data" axis shards the slot axis, a
+            "model" axis shards the site/column axis (either may be
+            absent, DESIGN.md §16); ``None`` serves unsharded.
         superbatch_k: max gamma waves one ``poll`` dispatch may scan on
             device when the admission queue is deeper than ``n_slots``
             (DESIGN.md §13); 1 = one wave per dispatch (the PR-5 pipeline).
@@ -285,25 +290,49 @@ class TNNEngine:
         self._encode = jax.jit(lambda imgs: encode_images(imgs, self.cfg))
 
         def fwd(ps, x):  # (b, S, p) spikes -> (b, S, q) last-layer times
-            return network_forward(x, ps, self.cfg)[-1]
+            return network_forward(x, list(ps), self.cfg)[-1]
 
         def fwd_k(ps, x_k):  # (k, slots, S, p) -> (k, slots, S, q)
-            return network_forward_superbatch(x_k, ps, self.cfg)[-1]
+            return network_forward_superbatch(x_k, list(ps), self.cfg)[-1]
 
         if mesh is None:
             self._forward = jax.jit(fwd)
             self._forward_sb = jax.jit(fwd_k)
         else:
-            self._forward = jax.jit(shard_map(
+            # spec-driven 2-D sharding (DESIGN.md §16): slots over "data",
+            # sites over "model" (params site-sharded); a site count that
+            # does not divide the model axis rides through no-op pad sites
+            # added outside the shard_map and sliced off the readout —
+            # classify runs on the gathered logical z, so the site-sum
+            # vote never sees a pad site.
+            sp = network_mesh_spec(self.cfg, mesh)
+            t_in = self.cfg.layers[0].column.wave.T
+            inner = shard_map(
                 fwd, mesh=mesh,
-                in_specs=(P(), P("data")),
-                out_specs=P("data"),
-            ))
-            self._forward_sb = jax.jit(shard_map(
+                in_specs=(sp.params_spec(), sp.x_spec()),
+                out_specs=sp.x_spec(),
+            )
+            inner_k = shard_map(
                 fwd_k, mesh=mesh,
-                in_specs=(P(), P(None, "data")),
-                out_specs=P(None, "data"),
-            ))
+                in_specs=(sp.params_spec(), sp.x_spec(leading=1)),
+                out_specs=sp.x_spec(leading=1),
+            )
+            if sp.site_pad:
+                def fwd_pad(ps, x):
+                    z = inner(sp.pad_weights(list(ps)),
+                              sp.pad_spike_sites(x, t_in, axis=1))
+                    return sp.slice_sites(z, axis=1)
+
+                def fwd_k_pad(ps, x_k):
+                    z_k = inner_k(sp.pad_weights(list(ps)),
+                                  sp.pad_spike_sites(x_k, t_in, axis=2))
+                    return sp.slice_sites(z_k, axis=2)
+
+                self._forward = jax.jit(fwd_pad)
+                self._forward_sb = jax.jit(fwd_k_pad)
+            else:
+                self._forward = jax.jit(inner)
+                self._forward_sb = jax.jit(inner_k)
         self._classify = jax.jit(
             lambda z, vt: classify(z, vt, self.T, soft=True))
 

@@ -7,8 +7,10 @@ silicon applies them — so its trainer drives gamma waves instead:
 * **wave batching** — each step is one jitted gamma wave over a fixed-shape
   batch of encoded images through ``core.network.make_train_step`` (forward
   + counter-form STDP, weight buffers donated). With a mesh the batch axis
-  is ``shard_map``-sharded over "data" like ``TNNEngine``; the counters are
-  psum'd, so the learned weights are device-count invariant. The network
+  is ``shard_map``-sharded over "data" and the site/column axis over
+  "model" like ``TNNEngine`` (the spec-driven 2-D factorization of
+  DESIGN.md §16); the counters are psum'd, so the learned weights are
+  invariant to the whole (data, model) factorization. The network
   config's ``impl`` picks the backend — ``impl="fused"`` collapses the
   whole wave (every layer's forward + STDP counters) into ONE Pallas
   launch (DESIGN.md §10, §11) and trains bit-identically to every other

@@ -18,9 +18,64 @@ fixed seed (``PROPTEST_SEED``) and a randomized budget
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
+import textwrap
 from typing import Callable, Optional
 
 import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the (data, model) factorizations of a 4-device host that every 2-D mesh
+# parity suite sweeps (DESIGN.md §16) — (1, 1) is the one-device shard_map
+# degenerate case, the rest split batch rows x site/columns
+FACTORIZATIONS = ((1, 1), (4, 1), (2, 2), (1, 4))
+
+
+def host_devices(default: int = 4) -> int:
+    """Device count for sharded subprocess tests: ``TNN_HOST_DEVICES``
+    (what ``run.sh`` exports) overrides the default."""
+    return int(os.environ.get("TNN_HOST_DEVICES", default))
+
+
+def sharded_subprocess(script: str, *, devices: int = 4,
+                       marker: Optional[str] = None,
+                       timeout: int = 600) -> "subprocess.CompletedProcess":
+    """Run a jax test script in a fresh interpreter with ``devices`` forced
+    XLA host devices — THE harness for every shard_map test (the parent
+    pytest process has already initialized jax single-device, so device
+    splitting needs a subprocess).
+
+    Replaces five copy-pasted ``os.environ["XLA_FLAGS"] = ...`` preludes:
+    the flag is injected here, before the script's first jax import, and
+    ``TNN_HOST_DEVICES`` is exported so library-side validation
+    (``launch.mesh.make_host_mesh_2d``) and nested helpers agree on the
+    count. Asserts exit 0 (with captured output in the failure message)
+    and, when given, that ``marker`` was printed.
+    """
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["TNN_HOST_DEVICES"] = str(devices)
+    env.pop("XLA_FLAGS", None)  # the prelude owns the device count
+    r = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(script)],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+        timeout=timeout)
+    assert r.returncode == 0, (
+        f"sharded subprocess failed (rc={r.returncode})\n"
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}")
+    if marker is not None:
+        assert marker in r.stdout, (
+            f"marker {marker!r} missing\nstdout:\n{r.stdout}\n"
+            f"stderr:\n{r.stderr}")
+    return r
 
 
 def env_budget(default_n: int) -> int:

@@ -6,7 +6,9 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.data.tokens import TokenStream
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import (
+    describe, make_host_mesh, make_host_mesh_2d, parse_mesh,
+)
 from repro.sharding import partition as PT
 from repro.sharding.context import use_partitioning
 from repro.train import optimizer as OPT
@@ -31,6 +33,36 @@ def test_sharded_train_step_on_host_mesh():
             state, metrics = fn(state, stream.batch_at(i))
     assert np.isfinite(float(metrics["loss_total"]))
     assert int(state["step"]) == 3
+
+
+def test_parse_mesh():
+    assert parse_mesh("4x1") == (4, 1)
+    assert parse_mesh("2x2") == (2, 2)
+    assert parse_mesh(" 2X2 ") == (2, 2)  # case/whitespace tolerant
+    for bad in ("4", "x2", "2x", "0x2", "2x0", "axb", "2x2x2", "-1x2",
+                "2 x 2", ""):
+        with pytest.raises(ValueError):
+            parse_mesh(bad)
+
+
+def test_make_host_mesh_2d_validates():
+    mesh = make_host_mesh_2d(1, 1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+    with pytest.raises(ValueError):
+        make_host_mesh_2d(0, 1)
+    with pytest.raises(ValueError):
+        make_host_mesh_2d(1, -1)
+    # asking for more devices than the host has names the env knob
+    too_many = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="TNN_HOST_DEVICES"):
+        make_host_mesh_2d(too_many, 1)
+
+
+def test_describe_both_mesh_kinds():
+    s = describe(make_host_mesh())
+    assert "data" in s and "devices" in s
+    s2 = describe(make_host_mesh_2d(1, 1))
+    assert "data" in s2 and "model" in s2
 
 
 def test_rules_survive_meshes_missing_axes():

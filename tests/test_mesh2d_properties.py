@@ -1,0 +1,282 @@
+"""2-D mesh factorization parity (DESIGN.md §16): for a fixed global batch
+and seed, every (data, model) factorization of the same device budget must
+produce bit-identical trained weights, vote tables, per-uid classify
+results and checkpoints as the single-device reference — batch rows shard
+over "data", TNN site/columns over "model", STDP counters psum'd, site
+counts that don't divide the model axis ride through no-op pad sites.
+
+Every test is a ``sharded_subprocess`` (the parent pytest process is
+single-device). CI runs this module as its own fixed-seed step with
+``TNN_HOST_DEVICES=4``; it is ignored in the tier-1 sweep like the other
+property modules.
+"""
+import textwrap
+
+from proptest import sharded_subprocess
+
+# -- randomized topologies x backends x factorizations: training parity ----
+
+TRAIN_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import sys
+    sys.path.insert(0, "tests")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from proptest import (FACTORIZATIONS, build_network, env_budget,
+                          env_seed, topology_specs)
+    from repro.core import init_network, with_impl
+    from repro.core.network import (make_superbatch_step, make_train_step,
+                                    params_to_tree)
+    from repro.launch.mesh import make_host_mesh_2d
+
+    strat = topology_specs(max_depth=3, allow_unfusable=False)
+    seed, n = env_seed(), env_budget(2)
+    B, K = 4, 2  # global batch divisible by every data axis in play
+    for i in range(n):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+        spec = dict(strat(rng), B=B)
+        ref = build_network(spec)
+        params = init_network(jax.random.PRNGKey(spec["seed"]), ref)
+        T = ref.layers[0].column.wave.T
+        x_k = jax.random.randint(
+            jax.random.PRNGKey(spec["seed"] ^ 0x3344),
+            (K, B, spec["C"], spec["p1"]), 0, T + 1, jnp.int8)
+
+        def state0():
+            return {"params": params_to_tree([jnp.array(w) for w in params]),
+                    "rng": jax.random.PRNGKey(1),
+                    "wave": jnp.zeros((), jnp.int32)}
+
+        for impl, packed in (("direct", True), ("pallas", True),
+                             ("fused", True), ("fused", False)):
+            cfg = dataclasses.replace(with_impl(ref, impl), packed=packed)
+            s_ref, z_ref = make_train_step(cfg, None, donate=False)(
+                state0(), x_k[0])
+            sk_ref, zk_ref = make_superbatch_step(cfg, None, donate=False)(
+                state0(), x_k)
+            for dm in FACTORIZATIONS:
+                mesh = make_host_mesh_2d(*dm)
+                tag = f"case {i} {impl} packed={packed} {dm}"
+                s, z = make_train_step(cfg, mesh, donate=False)(
+                    state0(), x_k[0])
+                np.testing.assert_array_equal(
+                    np.asarray(z), np.asarray(z_ref), err_msg=tag)
+                for name in s_ref["params"]:
+                    np.testing.assert_array_equal(
+                        np.asarray(s["params"][name]),
+                        np.asarray(s_ref["params"][name]),
+                        err_msg=f"{tag} {name}")
+                sk, zk = make_superbatch_step(cfg, mesh, donate=False)(
+                    state0(), x_k)
+                np.testing.assert_array_equal(
+                    np.asarray(zk), np.asarray(zk_ref), err_msg=tag)
+                for name in sk_ref["params"]:
+                    np.testing.assert_array_equal(
+                        np.asarray(sk["params"][name]),
+                        np.asarray(sk_ref["params"][name]),
+                        err_msg=f"{tag} K={K} {name}")
+        print(f"case {i} OK: C={spec['C']} depth={len(spec['qs'])}")
+    print("mesh2d train parity OK")
+""")
+
+
+def test_mesh2d_train_parity_subprocess():
+    """Randomized topologies: single-wave and K-wave superbatch training is
+    bit-exact across every (data, model) factorization, per backend and
+    packed/unpacked — including site counts that need model-axis padding."""
+    sharded_subprocess(TRAIN_SCRIPT, devices=4,
+                       marker="mesh2d train parity OK")
+
+
+# -- serving: vote table + per-uid classify parity across factorizations ---
+
+SERVE_SCRIPT = textwrap.dedent("""
+    import jax, numpy as np
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
+    from repro.core import init_network
+    from repro.data.mnist_like import digits
+    from repro.launch.mesh import make_host_mesh_2d
+    from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+
+    SITES = 9  # 9 % 2 and 9 % 4 != 0: the model axis needs pad sites
+    for impl in ("direct", "fused"):
+        cfg = launcher_network_config(SITES, depth=2, impl=impl)
+        params = init_network(jax.random.PRNGKey(0), cfg)
+        fit_imgs, labs = digits(16, seed=1)
+        fit_imgs = crop_field(fit_imgs, SITES)
+        test_imgs = crop_field(digits(11, seed=2)[0], SITES)
+
+        ref = TNNEngine(cfg, params, n_slots=8, impl=impl, superbatch_k=2)
+        ref.fit(fit_imgs, labs)
+        for uid in range(11):
+            ref.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
+        a = ref.run_until_done(pipelined=True)
+        for dm in ((4, 1), (2, 2), (1, 4)):
+            mesh = make_host_mesh_2d(*dm)
+            sh = TNNEngine(cfg, params, n_slots=8, impl=impl, mesh=mesh,
+                           superbatch_k=2)
+            sh.fit(fit_imgs, labs)
+            np.testing.assert_array_equal(np.asarray(ref.vote_table),
+                                          np.asarray(sh.vote_table),
+                                          err_msg=f"{impl} {dm}")
+            for uid in range(11):
+                sh.submit(ClassifyRequest(uid=uid, image=test_imgs[uid]))
+            b = sh.run_until_done(pipelined=True)
+            assert ([a[u].result for u in range(11)] ==
+                    [b[u].result for u in range(11)]), (impl, dm)
+    print("mesh2d serving parity OK")
+""")
+
+
+def test_mesh2d_serving_parity_subprocess():
+    """Superbatched pipelined serving on every factorization reproduces the
+    unmeshed engine's vote table and per-uid classify results bit-exactly,
+    with a site count (9) that pads on the model axis."""
+    sharded_subprocess(SERVE_SCRIPT, devices=4,
+                       marker="mesh2d serving parity OK")
+
+
+# -- online STDP + hot swap: shadow weights match the unmeshed trainer -----
+
+ONLINE_SCRIPT = textwrap.dedent("""
+    import os
+    SEED = int(os.environ.get("PROPTEST_SEED", "0"))
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.tnn_mnist import crop_field, launcher_network_config
+    from repro.core import (init_train_state, make_train_step,
+                            params_from_tree)
+    from repro.data.mnist_like import digits
+    from repro.launch.mesh import make_host_mesh_2d
+    from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
+    from repro.train.tnn_trainer import WaveStream
+
+    SITES, SLOTS, N = 4, 8, 3
+    cfg = launcher_network_config(SITES, depth=2, impl="fused")
+    stream = WaveStream(cfg, N * SLOTS, SLOTS, seed=1)
+    st0 = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    params = params_from_tree(st0["params"], cfg)
+
+    # the unmeshed trainer on the same stream is the bit reference
+    step_fn = make_train_step(cfg)
+    state = init_train_state(jax.random.PRNGKey(SEED), cfg)
+    for w in range(N):
+        state, _ = step_fn(state, jnp.asarray(stream.batch_at(w)))
+
+    imgs, labs = digits(16, seed=1)
+    published = {}  # dm -> the hot-swapped serving weights
+    for dm in ((4, 1), (2, 2), (1, 4)):
+        mesh = make_host_mesh_2d(*dm)
+        eng = TNNEngine(cfg, params, n_slots=SLOTS, impl="fused", mesh=mesh,
+                        online_stdp=True, swap_every=2, seed=SEED)
+        eng.fit(crop_field(imgs, SITES), labs)
+        for uid in range(N * SLOTS):
+            eng.submit(ClassifyRequest(uid=uid, image=stream.images[uid]))
+        done = eng.run_until_done(pipelined=True)
+        assert sorted(done) == list(range(N * SLOTS)), dm
+        assert eng.swaps >= 1, dm
+        assert int(eng.learn_state["wave"]) == int(state["wave"]), dm
+        np.testing.assert_array_equal(np.asarray(eng.learn_state["rng"]),
+                                      np.asarray(state["rng"]))
+        for name in state["params"]:
+            np.testing.assert_array_equal(
+                np.asarray(eng.learn_state["params"][name]),
+                np.asarray(state["params"][name]), err_msg=f"{dm} {name}")
+        published[dm] = [np.asarray(w) for w in eng.params]
+    # the hot-swapped serving weights agree across factorizations (the
+    # shadow keeps learning past the last swap, so they are compared to
+    # each other, not to the final shadow)
+    ref_pub = published[(4, 1)]
+    for dm, ws in published.items():
+        for li, (a, b) in enumerate(zip(ws, ref_pub)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"published {dm} layer {li}")
+    print("mesh2d online parity OK")
+""")
+
+
+def test_mesh2d_online_hot_swap_parity_subprocess():
+    """Learn-while-serving on every factorization: the shadow weights match
+    the unmeshed trainer on the same stream bit-for-bit, and the hot-swap
+    published weights equal the shadow at the final swap."""
+    sharded_subprocess(ONLINE_SCRIPT, devices=4,
+                       marker="mesh2d online parity OK")
+
+
+# -- checkpoints are factorization-agnostic --------------------------------
+
+CKPT_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import tempfile
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.checkpoint import Checkpointer, restore_tnn
+    from repro.checkpoint.checkpointer import tnn_config_fingerprint
+    from repro.configs.tnn_mnist import default_thetas, network_config
+    from repro.core import init_train_state, make_train_step
+    from repro.launch.mesh import make_host_mesh_2d
+
+    SITES, B, N, M = 9, 8, 3, 2  # 9 sites: pads under model=2 and model=4
+    theta1, theta2 = default_thetas(SITES)
+    base = network_config(sites=SITES, theta1=theta1, theta2=theta2,
+                          impl="fused")
+    T = base.layers[0].column.wave.T
+    xs = jax.random.randint(
+        jax.random.PRNGKey(7), (N + M, B, SITES, base.layers[0].column.p),
+        0, T + 1, dtype=jnp.uint8)
+
+    def host(state):
+        return jax.tree_util.tree_map(np.asarray, state)
+
+    for impl, packed in (("direct", True), ("fused", True),
+                         ("fused", False)):
+        cfg = dataclasses.replace(
+            network_config(sites=SITES, theta1=theta1, theta2=theta2,
+                           impl=impl), packed=packed)
+        # unsharded N+M-wave reference
+        step_un = make_train_step(cfg, donate=False)
+        ref = init_train_state(jax.random.PRNGKey(0), cfg)
+        for w in range(N + M):
+            ref, _ = step_un(ref, xs[w])
+        ref = host(ref)
+
+        # N waves under (4, 1) -> checkpoint
+        step_41 = make_train_step(cfg, make_host_mesh_2d(4, 1),
+                                  donate=False)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        for w in range(N):
+            state, _ = step_41(state, xs[w])
+        vt = jnp.zeros((SITES, cfg.layers[-1].column.q, cfg.n_classes),
+                       jnp.float32)
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, async_save=False)
+            ck.save(N, dict(host(state), vote_table=np.asarray(vt)),
+                    extra={"config": tnn_config_fingerprint(cfg),
+                           "has_vote": False})
+            # restore under (2, 2) and (1, 4), train M more waves each
+            for dm in ((2, 2), (1, 4)):
+                rest, extra = restore_tnn(ck, cfg)
+                rest.pop("vote_table")
+                step_dm = make_train_step(cfg, make_host_mesh_2d(*dm),
+                                          donate=False)
+                for w in range(N, N + M):
+                    rest, _ = step_dm(rest, xs[w])
+                rest = host(rest)
+                tag = f"{impl} packed={packed} {dm}"
+                assert int(rest["wave"]) == int(ref["wave"]), tag
+                np.testing.assert_array_equal(rest["rng"], ref["rng"],
+                                              err_msg=tag)
+                for name in ref["params"]:
+                    np.testing.assert_array_equal(
+                        rest["params"][name], ref["params"][name],
+                        err_msg=f"{tag} {name}")
+        print(f"{impl} packed={packed} OK")
+    print("mesh2d checkpoint parity OK")
+""")
+
+
+def test_mesh2d_checkpoint_factorization_agnostic_subprocess():
+    """Checkpoints never encode the factorization: N waves trained under
+    (4,1), saved, restored under (2,2)/(1,4) and trained M more equal the
+    unsharded N+M-wave run bit-for-bit, per backend x packed."""
+    sharded_subprocess(CKPT_SCRIPT, devices=4,
+                       marker="mesh2d checkpoint parity OK")

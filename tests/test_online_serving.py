@@ -5,7 +5,6 @@ swaps publish atomically with zero lost/duplicated requests, swap
 checkpoints interoperate with ``from_checkpoint``, and the per-version
 accounting (ServeStats + the loadgen A/B probe) splits cleanly."""
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -25,6 +24,8 @@ from repro.core import (
 from repro.data.mnist_like import digits
 from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
 from repro.train.tnn_trainer import WaveStream
+
+from proptest import sharded_subprocess
 
 SEED = int(os.environ.get("PROPTEST_SEED", "0"))
 SITES = 4  # tiny perfect-square geometry: 7x7 field
@@ -318,7 +319,6 @@ def test_loadgen_ab_accuracy_probe():
 
 MESHED_ONLINE_SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     SEED = int(os.environ.get("PROPTEST_SEED", "0"))
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.tnn_mnist import crop_field, launcher_network_config
@@ -367,10 +367,5 @@ def test_meshed_online_matches_unmeshed_trainer_subprocess():
     """4-way data-sharded online serving produces bit-identical shadow
     weights to the unmeshed trainer on the same stream (subprocess, like
     the other shard_map tests)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run(
-        [sys.executable, "-c", MESHED_ONLINE_SCRIPT], env=env, cwd=ROOT,
-        capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "meshed online parity OK" in r.stdout
+    sharded_subprocess(MESHED_ONLINE_SCRIPT, devices=4,
+                       marker="meshed online parity OK")

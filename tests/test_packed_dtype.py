@@ -10,8 +10,6 @@ test_tnn_serving's meshed test).
 import dataclasses
 import json
 import os
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -19,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import assert_packed_parity
+from proptest import assert_packed_parity, sharded_subprocess
 from repro.configs.tnn_mnist import deep_config, network_config
 from repro.core import (
     ColumnConfig,
@@ -168,8 +166,6 @@ def test_packed_excluded_from_checkpoint_fingerprint():
 
 
 SHARDED_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.tnn_mnist import launcher_network_config
@@ -210,10 +206,5 @@ def test_sharded_packed_parity_subprocess():
     """uint8-packed fused training is bit-exact with the i32 boundary
     under a 4-way data-sharded shard_map AND unsharded — all four
     (packed x meshed) cells produce identical weights and readout."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run(
-        [sys.executable, "-c", SHARDED_SCRIPT], env=env, cwd=ROOT,
-        capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "sharded packed parity OK" in r.stdout
+    sharded_subprocess(SHARDED_SCRIPT, devices=4,
+                       marker="sharded packed parity OK")

@@ -1,14 +1,11 @@
 """Pipeline parallelism (GPipe over the pod axis): equivalence to sequential
 execution, forward and backward. Needs >1 device, so it runs in a
 subprocess with forced host devices (the main pytest process is 1-device)."""
-import os
-import subprocess
-import sys
 import textwrap
 
+from proptest import sharded_subprocess
+
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from repro.sharding.pipeline import pipeline_apply
 
@@ -55,11 +52,7 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_pipeline_equivalence_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                       capture_output=True, text=True, timeout=420)
-    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    r = sharded_subprocess(SCRIPT, devices=4, timeout=420)
     assert "forward OK" in r.stdout
     assert "backward OK" in r.stdout
     assert "jit/microbatch OK" in r.stdout

@@ -3,7 +3,6 @@ per-uid parity (depth 2 and 3, fused and per-layer, warm-started and
 meshed), the shared no-op padding helper, latency accounting, slot
 resolution, timeout semantics, and the loadgen harness."""
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -17,6 +16,8 @@ from repro.core import encode_images, init_network, network_forward
 from repro.data.mnist_like import digits
 from repro.kernels.padding import pad_batch_rows
 from repro.launch.serve import resolve_slots
+
+from proptest import sharded_subprocess
 from repro.serve.tnn_engine import (
     ClassifyRequest,
     ServeTimeout,
@@ -343,8 +344,6 @@ def test_loadgen_poisson_and_modes():
 
 
 MESHED_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.tnn_mnist import crop_field, launcher_network_config
     from repro.core import encode_images, init_network, network_forward
@@ -394,10 +393,5 @@ def test_meshed_pipelined_matches_unmeshed_lockstep_subprocess():
     results as the unmeshed lock-step reference, and the no-op padding is
     bit-inert through the shard_map'd forward (subprocess, like
     test_tnn_trainer's sharded-step test)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run(
-        [sys.executable, "-c", MESHED_SCRIPT], env=env, cwd=ROOT,
-        capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "meshed serving parity OK" in r.stdout
+    sharded_subprocess(MESHED_SCRIPT, devices=4,
+                       marker="meshed serving parity OK")

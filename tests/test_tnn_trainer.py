@@ -4,8 +4,6 @@ and device-count invariance of the sharded step (subprocess, like
 test_pipeline)."""
 import os
 import shutil
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -27,6 +25,8 @@ from repro.core import (
 from repro.data.mnist_like import digits
 from repro.serve.tnn_engine import ClassifyRequest, TNNEngine
 from repro.train.tnn_trainer import TNNTrainConfig, TNNTrainer, WaveStream
+
+from proptest import sharded_subprocess
 
 SITES = 4  # tiny perfect-square geometry: 4+4 columns, 7x7 field
 
@@ -406,8 +406,6 @@ def test_train_config_smoke_defaults():
 
 
 SHARDED_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.tnn_mnist import network_config
     from repro.core import init_train_state, make_train_step
@@ -440,11 +438,5 @@ SHARDED_SCRIPT = textwrap.dedent("""
 def test_sharded_train_step_matches_unsharded_subprocess():
     """4-way data-sharded training produces the same bits as unsharded —
     the global-uniform-draw + counter-psum design of DESIGN.md §9."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run(
-        [sys.executable, "-c", SHARDED_SCRIPT], env=env,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "sharded == unsharded OK" in r.stdout
+    sharded_subprocess(SHARDED_SCRIPT, devices=4,
+                       marker="sharded == unsharded OK")

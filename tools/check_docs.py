@@ -46,6 +46,13 @@ Three checks, all run by CI next to the tier-1 pytest run:
    version accounting — the ``--online-stdp``/``--swap-every`` flags it
    documents must exist in ``launch/serve.py``, and the README must show
    the learn-while-serving quickstart.
+9. **§16 anchors + the 2-D mesh surface.** DESIGN.md §16 (2-D mesh
+   scale-out) must keep its anchor topics — mesh spec, site padding,
+   psum over both axes, volley all-gather — the ``--mesh`` flag it
+   documents must exist in BOTH launchers, the collective probe and the
+   checked-in ``benchmarks/baseline-mesh.json`` must exist, and the
+   README must show the 2-D mesh quickstart (``--mesh`` plus the
+   ``--mesh2d`` benchmark sweep).
 
 Run from the repo root:
 
@@ -327,6 +334,55 @@ def check_section15_online(root: pathlib.Path) -> list:
     return problems
 
 
+# §16 is the 2-D mesh scale-out section; these topics are its contract
+# with kernels/padding.py (MeshSpec), core/network.py (network_mesh_spec,
+# _site_pad_wrap), launch/mesh.py and launch/collective_probe.py, and
+# must stay.
+SECTION16_ANCHORS = ("mesh spec", "site padding", "psum over both axes",
+                     "volley all-gather")
+MESH_FLAG = "--mesh"
+
+
+def check_section16_mesh2d(root: pathlib.Path) -> list:
+    """DESIGN.md §16 must exist with its anchor topics; the ``--mesh``
+    flag it documents must exist in both launchers; the collective probe
+    and the checked-in mesh baseline must exist; and the README must show
+    the 2-D mesh quickstart."""
+    problems = []
+    text = (root / "DESIGN.md").read_text()
+    m = re.search(r"^##\s*§16\b.*?(?=^##\s*§|\Z)", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        problems.append("DESIGN.md: no §16 section (2-D mesh scale-out)")
+    else:
+        body = m.group(0).split("\n", 1)[-1].lower()
+        for anchor in SECTION16_ANCHORS:
+            if anchor not in body:
+                problems.append(
+                    f"DESIGN.md §16: missing anchor topic {anchor!r}")
+    for rel in LAUNCHERS:
+        if f'"{MESH_FLAG}"' not in (root / rel).read_text():
+            problems.append(
+                f"{rel}: missing {MESH_FLAG} flag (DESIGN.md §16 "
+                f"documents it)")
+    if not (root / "src" / "repro" / "launch" / "collective_probe.py").exists():
+        problems.append("src/repro/launch/collective_probe.py: missing "
+                        "(DESIGN.md §16 documents the collective probe)")
+    if not (root / "benchmarks" / "baseline-mesh.json").exists():
+        problems.append("benchmarks/baseline-mesh.json: missing — the 2-D "
+                        "mesh sweep baseline is checked in (DESIGN.md §16); "
+                        "run `python benchmarks/run.py --smoke --mesh2d` on "
+                        "a green runner to regenerate")
+    readme = (root / "README.md").read_text()
+    for needle, why in ((MESH_FLAG, "the 2-D mesh launcher flag"),
+                        ("--mesh2d", "the mesh benchmark sweep")):
+        if needle not in readme:
+            problems.append(
+                f"README.md: never mentions {needle} — the §16 2-D mesh "
+                f"quickstart must document {why}")
+    return problems
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parent.parent
     design = root / "DESIGN.md"
@@ -356,10 +412,11 @@ def main() -> int:
     s13_problems = check_section13_superbatch(root)
     s14_problems = check_section14_packed(root)
     s15_problems = check_section15_online(root)
+    s16_problems = check_section16_mesh2d(root)
 
     if (dangling or backend_problems or launcher_problems or s11_problems
             or s12_problems or s13_problems or s14_problems
-            or s15_problems):
+            or s15_problems or s16_problems):
         if dangling:
             print("check_docs: dangling DESIGN.md references:", file=sys.stderr)
             for d in dangling:
@@ -394,6 +451,10 @@ def main() -> int:
                   file=sys.stderr)
             for p in s15_problems:
                 print(f"  {p}", file=sys.stderr)
+        if s16_problems:
+            print("check_docs: §16 / 2-D mesh problems:", file=sys.stderr)
+            for p in s16_problems:
+                print(f"  {p}", file=sys.stderr)
         return 1
     print(f"check_docs: OK — {n_refs} references across {len(SCAN_DIRS)} dirs "
           f"all resolve into {len(sections)} sections; README backend matrix "
@@ -402,7 +463,8 @@ def main() -> int:
           f"§12 anchors + serving flags + loadgen intact; §13 anchors + "
           f"{SUPERBATCH_FLAG} launcher flags intact; §14 anchors + "
           f"{PACKED_FLAG}/tuner surface intact; §15 anchors + online-serving "
-          f"flags intact")
+          f"flags intact; §16 anchors + {MESH_FLAG}/probe/baseline surface "
+          f"intact")
     return 0
 
 
